@@ -1,0 +1,35 @@
+"""Paper Table 4: hierarchical (P' ranks x T threads) vs flat P-rank scan."""
+
+from __future__ import annotations
+
+from repro.core.simulator import (
+    registration_like_costs,
+    simulate_distributed_scan,
+)
+
+N = 4096
+CORES = [64, 128, 256, 512, 1024]
+
+
+def run():
+    rows = []
+    costs = registration_like_costs(N)
+    for cores in CORES:
+        n_use = N - N % cores
+        for alg in ["dissemination", "ladner_fischer"]:
+            flat = simulate_distributed_scan(
+                costs[:n_use], ranks=cores, threads=1, algorithm=alg,
+            )
+            threads = 12
+            ranks = cores // threads
+            n_use_h = N - N % ranks
+            hier = simulate_distributed_scan(
+                costs[:n_use_h], ranks=ranks, threads=threads, algorithm=alg,
+            )
+            rows.append((
+                f"table4_{alg}_{cores}",
+                hier.makespan * 1e6,
+                f"S'={flat.makespan / hier.makespan:.2f};"
+                f"flat_us={flat.makespan * 1e6:.0f}",
+            ))
+    return rows

@@ -1,0 +1,68 @@
+"""Paper Fig. 8: prefix-scan microbenchmarks with mock operators.
+
+8a: constant operator cost; 8b: Exponential(1/t) cost; 8c: work-stealing vs
+static on the dynamic operator.  Virtual-time via the simulator (the paper's
+98304 elements, MT19937(1410)), plus a real threaded run at container scale.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.simulator import (
+    constant_costs,
+    exponential_costs,
+    simulate_distributed_scan,
+)
+from repro.core.work_stealing import static_reduce, stealing_reduce
+
+N = 98304
+ALGS = ["dissemination", "ladner_fischer", "brent_kung"]
+
+
+def run():
+    rows = []
+    # Fig 8a/8b: algorithms on constant vs exponential operator, 64 ranks x 12.
+    for dist, costs in [("static", constant_costs(N, 0.01)),
+                        ("dynamic", exponential_costs(N, 0.01))]:
+        for alg in ALGS:
+            r = simulate_distributed_scan(
+                costs[: N - N % 64], ranks=64, threads=12, algorithm=alg,
+                stealing=False,
+            )
+            rows.append((f"fig8_{dist}_{alg}", r.makespan * 1e6,
+                         f"work={r.work}"))
+    # Fig 8c: stealing on the dynamic operator across core counts.
+    costs = exponential_costs(N, 0.01)
+    for ranks in [32, 64, 128, 256]:
+        c = costs[: N - N % ranks]
+        stat = simulate_distributed_scan(c, ranks=ranks, threads=12,
+                                         algorithm="dissemination",
+                                         stealing=False)
+        steal = simulate_distributed_scan(c, ranks=ranks, threads=12,
+                                          algorithm="dissemination",
+                                          stealing=True)
+        rows.append((f"fig8c_steal_{ranks * 12}cores", steal.makespan * 1e6,
+                     f"speedup_vs_static={stat.makespan / steal.makespan:.3f}"))
+    # Real threaded run (sleep-based op) at container scale: 3 threads.
+    rng = np.random.Generator(np.random.MT19937(1410))
+    delays = rng.exponential(0.002, size=120)
+
+    def op(a, b):
+        time.sleep(delays[b[1] % 120])
+        return (a[0] * b[0] % 997, b[1])
+
+    items = [(i % 7 + 1, i) for i in range(120)]
+    t0 = time.time()
+    _, st_s = static_reduce(op, items, 3)
+    t_static = time.time() - t0
+    t0 = time.time()
+    _, st_w = stealing_reduce(op, items, 3)
+    t_steal = time.time() - t0
+    rows.append(("fig8c_real_threads_static", t_static * 1e6,
+                 f"imbalance={st_s.imbalance():.3f}"))
+    rows.append(("fig8c_real_threads_stealing", t_steal * 1e6,
+                 f"imbalance={st_w.imbalance():.3f}"))
+    return rows

@@ -1,0 +1,57 @@
+"""Wall-clock benchmarks of the in-model scan paths on this container's CPU:
+chunked SSD scan (reduce-then-scan) vs naive sequential recurrence, and the
+circuit choice for the inter-chunk phase.  Real timings, not simulation."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+
+def _time(f, *args, reps=3):
+    y = f(*args)
+    jax.block_until_ready(y)
+    t0 = time.time()
+    for _ in range(reps):
+        y = f(*args)
+    jax.block_until_ready(y)
+    return (time.time() - t0) / reps
+
+
+def run():
+    rows = []
+    key = jax.random.PRNGKey(0)
+    b, h, l, dk, dv = 2, 4, 2048, 64, 64
+    ks = jax.random.split(key, 4)
+    q = jax.random.normal(ks[0], (b, h, l, dk)) * 0.3
+    k = jax.random.normal(ks[1], (b, h, l, dk)) * 0.3
+    v = jax.random.normal(ks[2], (b, h, l, dv)) * 0.5
+    la = -jax.nn.softplus(jax.random.normal(ks[3], (b, h, l)))
+
+    seq = jax.jit(jax.vmap(jax.vmap(ref.ssm_scan_reference)))
+    t_seq = _time(seq, q, k, v, la)
+    rows.append(("ssd_sequential_recurrence", t_seq * 1e6,
+                 f"tok_per_s={b * l / t_seq:.0f}"))
+    for chunk in [64, 128, 256]:
+        f = jax.jit(lambda q, k, v, la, c=chunk: ops.ssd_scan(
+            q, k, v, la, chunk=c, backend="xla"))
+        t = _time(f, q, k, v, la)
+        rows.append((f"ssd_chunked_c{chunk}", t * 1e6,
+                     f"speedup_vs_seq={t_seq / t:.1f}x"))
+    for alg in ["sequential", "dissemination", "ladner_fischer", "brent_kung"]:
+        f = jax.jit(lambda q, k, v, la, a=alg: ops.ssd_scan(
+            q, k, v, la, chunk=128, backend="xla", scan_algorithm=a))
+        t = _time(f, q, k, v, la)
+        rows.append((f"ssd_interchunk_{alg}", t * 1e6, "chunk=128"))
+    # attention: blockwise-causal vs full-mask (memory-light vs naive)
+    d = 64
+    q4 = jax.random.normal(ks[0], (1, 4, 2048, d)) * 0.4
+    f_block = jax.jit(lambda q, k, v: ops.attention(q, k, v, causal=True,
+                                                    backend="xla"))
+    t = _time(f_block, q4, q4, q4)
+    rows.append(("attention_blockwise_2k", t * 1e6, ""))
+    return rows

@@ -1,0 +1,75 @@
+"""Paper Table 3 / Fig. 1 & 9: strong scaling of scan & full registration.
+
+4096 deformations with registration-like operator costs (heavy-tailed, the
+paper's Fig. 5a shape), 64..1024 cores (ranks x 12 threads, Piz Daint
+geometry).  Distributed (static) vs hierarchical work-stealing, three global
+algorithms; speedups vs the serial scan; Eq. (5)/(6) theoretical bounds.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.simulator import (
+    registration_like_costs,
+    simulate_distributed_scan,
+    theoretical_bound_full,
+    theoretical_bound_scan,
+)
+
+N = 4096
+ALGS = ["dissemination", "ladner_fischer", "brent_kung"]
+CORES = [64, 128, 256, 512, 1024]
+
+
+def run():
+    rows = []
+    costs = registration_like_costs(N)
+    pre = registration_like_costs(N, seed=77)
+    serial_scan = costs.sum()
+    serial_full = costs.sum() + pre.sum()
+    for mode, preprocess in [("scan", None), ("full", pre)]:
+        serial = serial_scan if mode == "scan" else serial_full
+        for cores in CORES:
+            for alg in ALGS:
+                # Table 3 (a): the flat "Distributed" MPI-only scan.
+                n_flat = N - N % cores
+                flat = simulate_distributed_scan(
+                    costs[:n_flat], ranks=cores, threads=1, algorithm=alg,
+                    preprocess_costs=None if preprocess is None
+                    else preprocess[:n_flat],
+                )
+                # Table 3 (b): hierarchical + work stealing (ours).
+                threads = 12
+                ranks = cores // threads
+                n_use = N - N % ranks
+                steal = simulate_distributed_scan(
+                    costs[:n_use], ranks=ranks, threads=threads,
+                    algorithm=alg, stealing=True,
+                    preprocess_costs=None if preprocess is None
+                    else preprocess[:n_use],
+                )
+                for tag, r, n_el in [("distributed", flat, n_flat),
+                                     ("steal", steal, n_use)]:
+                    speedup = serial / r.makespan
+                    rows.append((
+                        f"table3_{mode}_{alg}_{tag}_{cores}",
+                        r.makespan * 1e6,
+                        f"S={speedup:.1f};E={speedup / cores:.3f}",
+                    ))
+            bound = (theoretical_bound_scan(N, cores) if mode == "scan"
+                     else theoretical_bound_full(N, cores))
+            rows.append((f"table3_{mode}_bound_{cores}", 0.0,
+                         f"S_bound={bound:.1f}"))
+    # Stealing increment over hierarchical-static at ~1024 cores
+    # (paper Table 4 vs Table 3b: 162.5 -> 143.6 s = 1.13x).
+    n_use = N - N % 85
+    for alg in ALGS:
+        a = simulate_distributed_scan(costs[:n_use], ranks=85, threads=12,
+                                      algorithm=alg, stealing=False)
+        b = simulate_distributed_scan(costs[:n_use], ranks=85, threads=12,
+                                      algorithm=alg, stealing=True)
+        rows.append((f"table3_scan_steal_gain_{alg}_1020c",
+                     b.makespan * 1e6,
+                     f"gain={a.makespan / b.makespan:.2f}x"))
+    return rows

@@ -1,0 +1,32 @@
+"""Paper Fig. 10: weak scaling — 8 images per rank, 64..620 ranks (Ivy
+Bridge geometry: 20 threads/rank in the paper; ranks simulated directly)."""
+
+from __future__ import annotations
+
+from repro.core.simulator import (
+    registration_like_costs,
+    simulate_distributed_scan,
+)
+
+
+def run():
+    rows = []
+    per_rank = 8
+    for ranks in [64, 128, 256, 512, 620]:
+        n = per_rank * ranks * 4  # x4: threads share a rank's segment
+        costs = registration_like_costs(n)
+        pre = registration_like_costs(n, seed=77)
+        for mode, p in [("scan", None), ("full", pre)]:
+            for alg in ["dissemination", "ladner_fischer"]:
+                for steal in [False, True]:
+                    tag = "steal" if steal else "static"
+                    r = simulate_distributed_scan(
+                        costs, ranks=ranks, threads=4, algorithm=alg,
+                        stealing=steal, preprocess_costs=p,
+                    )
+                    rows.append((
+                        f"fig10_{mode}_{alg}_{tag}_{ranks}r",
+                        r.makespan * 1e6,
+                        f"n={n}",
+                    ))
+    return rows

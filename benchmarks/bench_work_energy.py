@@ -1,0 +1,41 @@
+"""Paper Table 5: work (exact operator applications) and energy of full
+registration, distributed vs work-stealing, vs the serial baseline."""
+
+from __future__ import annotations
+
+from repro.core.simulator import (
+    registration_like_costs,
+    simulate_distributed_scan,
+)
+
+N = 4096
+CORES = [64, 128, 256, 512, 1024]
+
+
+def run():
+    rows = []
+    costs = registration_like_costs(N)
+    pre = registration_like_costs(N, seed=77)
+    serial_work = (N - 1) + N  # scan ops + preprocessing (paper: 4096+4095)
+    serial_busy = costs.sum() + pre.sum()
+    serial_energy = serial_busy * 280.0  # busy watts only, one core
+    for alg in ["dissemination", "ladner_fischer"]:
+        for steal in [False, True]:
+            tag = "steal" if steal else "static"
+            for cores in CORES:
+                threads = 12
+                ranks = cores // threads
+                n_use = N - N % ranks
+                r = simulate_distributed_scan(
+                    costs[:n_use], ranks=ranks, threads=threads,
+                    algorithm=alg, stealing=steal,
+                    preprocess_costs=pre[:n_use],
+                )
+                rows.append((
+                    f"table5_{alg}_{tag}_{cores}",
+                    r.makespan * 1e6,
+                    f"work={r.work};work_x={r.work / serial_work:.2f};"
+                    f"energy_MJ={r.energy / 1e6:.3f};"
+                    f"energy_x={r.energy / serial_energy:.2f}",
+                ))
+    return rows

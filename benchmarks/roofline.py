@@ -1,0 +1,88 @@
+"""Roofline table: read experiments/dryrun/*.json, derive the three terms.
+
+compute   = HLO_FLOPs_per_device / 197e12           (bf16 peak, v5e)
+memory    = HLO_bytes_per_device / 819e9            (HBM)
+collective= collective_bytes_per_device / 50e9      (ICI per-link)
+
+Also reports MODEL_FLOPS/HLO_FLOPs (remat/redundancy waste) and the dominant
+term per cell.  Used directly by EXPERIMENTS.md §Roofline.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                            "dryrun")
+
+
+def load_cells(mesh: str = "16_16") -> List[Dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(ARTIFACT_DIR, f"*__{mesh}.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def roofline_rows(cells: List[Dict]) -> List[tuple]:
+    rows = []
+    for c in cells:
+        name = f"roofline_{c['arch']}_{c['shape']}"
+        if c.get("status") == "skip":
+            rows.append((name, 0.0, "SKIP:" + c.get("reason", "")[:40]))
+            continue
+        if c.get("status") != "ok" or "t_compute" not in c:
+            rows.append((name, 0.0, f"status={c.get('status')}"))
+            continue
+        terms = {"compute": c["t_compute"], "memory": c["t_memory"],
+                 "collective": c["t_collective"]}
+        dom = max(terms, key=terms.get)
+        step = max(terms.values())
+        ratio = c.get("model_flops_ratio", 0.0)
+        # roofline fraction: useful model flops at peak vs the step time the
+        # dominant term dictates.
+        n = c.get("n_chips", 256)
+        ideal = c.get("model_flops_total", 0.0) / (n * 197e12)
+        frac = ideal / step if step > 0 else 0.0
+        rows.append((
+            name,
+            step * 1e6,
+            f"tc={c['t_compute']:.4g};tm={c['t_memory']:.4g};"
+            f"tx={c['t_collective']:.4g};dom={dom};"
+            f"mf_ratio={ratio:.3f};roofline_frac={frac:.3f};"
+            f"peak_GiB={c['peak_bytes'] / 2 ** 30:.1f}",
+        ))
+    return rows
+
+
+def run():
+    return roofline_rows(load_cells())
+
+
+def print_table():
+    cells = load_cells()
+    hdr = (f"{'arch':22s} {'shape':12s} {'t_comp(s)':>10s} {'t_mem(s)':>10s} "
+           f"{'t_coll(s)':>10s} {'dom':>10s} {'MF/HLO':>7s} {'peak GiB':>9s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for c in cells:
+        if c.get("status") == "skip":
+            print(f"{c['arch']:22s} {c['shape']:12s} {'skip':>10s}")
+            continue
+        if "t_compute" not in c:
+            print(f"{c['arch']:22s} {c['shape']:12s} {c.get('status'):>10s}")
+            continue
+        terms = {"compute": c["t_compute"], "memory": c["t_memory"],
+                 "collective": c["t_collective"]}
+        dom = max(terms, key=terms.get)
+        print(f"{c['arch']:22s} {c['shape']:12s} {c['t_compute']:10.4g} "
+              f"{c['t_memory']:10.4g} {c['t_collective']:10.4g} {dom:>10s} "
+              f"{c.get('model_flops_ratio', 0):7.3f} "
+              f"{c['peak_bytes'] / 2 ** 30:9.2f}")
+
+
+if __name__ == "__main__":
+    print_table()

@@ -1,0 +1,78 @@
+"""Render the final §Roofline / §Dry-run tables for EXPERIMENTS.md from the
+artifact JSONs.  Usage: PYTHONPATH=src python benchmarks/summarize.py"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ART = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+ARCHS = ["codeqwen1.5-7b", "internlm2-20b", "qwen3-32b", "qwen2-72b",
+         "xlstm-350m", "zamba2-7b", "phi3.5-moe-42b-a6.6b", "arctic-480b",
+         "internvl2-1b", "whisper-base"]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(arch, shape, mesh):
+    p = os.path.join(ART, f"{arch}__{shape}__{mesh}.json")
+    if not os.path.exists(p):
+        return None
+    with open(p) as f:
+        return json.load(f)
+
+
+def roofline_md():
+    print("| arch | shape | t_comp (s) | t_mem (s) | t_coll (s) | bottleneck "
+          "| MODEL/HLO | roofline frac | peak GiB/dev | fits 16G |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for arch in ARCHS:
+        for shape in SHAPES:
+            c = load(arch, shape, "16_16")
+            if c is None:
+                print(f"| {arch} | {shape} | — | — | — | pending | | | | |")
+                continue
+            if c.get("status") == "skip":
+                print(f"| {arch} | {shape} | — | — | — | *skipped: "
+                      f"full attention @500k* | | | | |")
+                continue
+            if "t_compute" not in c:
+                print(f"| {arch} | {shape} | — | — | — | {c.get('status')} "
+                      f"| | | | |")
+                continue
+            terms = {"compute": c["t_compute"], "memory": c["t_memory"],
+                     "collective": c["t_collective"]}
+            dom = max(terms, key=terms.get)
+            step = max(terms.values())
+            n = c.get("n_chips", 256)
+            ideal = c.get("model_flops_total", 0.0) / (n * 197e12)
+            frac = ideal / step if step else 0.0
+            peak = c["peak_bytes"] / 2 ** 30
+            fits = "yes" if peak <= 16.0 else "**NO**"
+            print(f"| {arch} | {shape} | {c['t_compute']:.4g} | "
+                  f"{c['t_memory']:.4g} | {c['t_collective']:.4g} | {dom} | "
+                  f"{c.get('model_flops_ratio', 0):.3f} | {frac:.3f} | "
+                  f"{peak:.1f} | {fits} |")
+
+
+def multipod_md():
+    print("\n### Multi-pod (2x16x16 = 512 chips) compile status\n")
+    print("| arch | shape | status | peak GiB/dev | compile s |")
+    print("|---|---|---|---|---|")
+    for arch in ARCHS:
+        for shape in SHAPES:
+            c = load(arch, shape, "2_16_16")
+            if c is None:
+                print(f"| {arch} | {shape} | pending | | |")
+            elif c.get("status") == "skip":
+                print(f"| {arch} | {shape} | skip (full attn @500k) | | |")
+            else:
+                print(f"| {arch} | {shape} | {c['status']} | "
+                      f"{c.get('peak_bytes', 0) / 2 ** 30:.1f} | "
+                      f"{c.get('compile_s', '')} |")
+
+
+if __name__ == "__main__":
+    roofline_md()
+    multipod_md()

@@ -1,0 +1,71 @@
+"""The paper's application end-to-end: TEM series registration as a prefix
+scan with work stealing (paper §2.3/§3/§5 'scan' and 'full' registration).
+
+  PYTHONPATH=src python examples/registration_series.py [--frames 24]
+"""
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.core.registration import SeriesRegistrar
+from repro.core.work_stealing import work_stealing_scan
+from repro.data.images import make_series
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--frames", type=int, default=24)
+    ap.add_argument("--threads", type=int, default=4)
+    ap.add_argument("--size", type=int, default=96)
+    args = ap.parse_args()
+
+    print(f"generating {args.frames} near-periodic frames "
+          f"({args.size}x{args.size}, drifting lattice + shot noise)...")
+    frames, true = make_series(jax.random.PRNGKey(0), args.frames,
+                               size=args.size, noise=0.15)
+
+    reg = SeriesRegistrar(frames)
+    t0 = time.time()
+    elems = reg.preprocess_vmapped()          # function A, batched (parallel)
+    t_pre = time.time() - t0
+    print(f"preprocess (function A on {args.frames - 1} pairs): {t_pre:.2f}s")
+
+    # --- serial baseline (the paper's reference)
+    reg_seq = SeriesRegistrar(frames)
+    t0 = time.time()
+    seq = reg_seq.sequential(list(elems))
+    t_seq = time.time() - t0
+    print(f"sequential scan: {t_seq:.2f}s ({reg_seq.op_calls} operator calls, "
+          f"{reg_seq.total_iters} minimiser iterations)")
+
+    # --- work-stealing scan (the paper's contribution)
+    reg_ws = SeriesRegistrar(frames)
+    t0 = time.time()
+    out, stats = work_stealing_scan(reg_ws.op, list(elems), args.threads,
+                                    stealing=True)
+    t_ws = time.time() - t0
+    print(f"work-stealing scan ({args.threads} threads): {t_ws:.2f}s "
+          f"(ops={stats.total_ops}, imbalance={stats.imbalance():.2f}, "
+          f"boundaries={stats.boundaries})")
+
+    est = np.stack([np.asarray(e.deformation["shift"]) for e in out])
+    tru = np.asarray(true["shift"][1:])
+    err = np.abs(est - tru).max()
+    agree = max(
+        np.abs(np.asarray(a.deformation["shift"])
+               - np.asarray(b.deformation["shift"])).max()
+        for a, b in zip(seq, out)
+    )
+    print(f"max drift-recovery error vs ground truth: {err:.3f} px")
+    print(f"max |scan - sequential| deformation diff: {agree:.4f} px "
+          f"(equivalent minima, paper §2.3.3)")
+    print(f"note: the operator is compute-bound; on one CPU the scan's extra "
+          f"work costs wall-time — the win appears at P >> 1 "
+          f"(benchmarks/bench_strong_scaling.py simulates Piz Daint scale).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Phi-3.5-MoE-42B (6.6B active): 32L, 16 experts top-2, GQA kv=8
+[hf:microsoft/Phi-3.5-MoE-instruct]."""
+
+import dataclasses
+
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="phi3.5-moe-42b-a6.6b",
+    family="moe",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=6400,
+    vocab_size=32064,
+    n_experts=16,
+    top_k=2,
+    block_pattern=("moe",),
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG,
+    name="phi3.5-moe-smoke",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+    n_experts=4, vocab_size=512, moe_group_size=64,
+    param_dtype="float32", compute_dtype="float32",
+)

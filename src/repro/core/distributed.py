@@ -1,0 +1,243 @@
+"""Distributed prefix scan over mesh axes (paper §4.1/§4.2) — shard_map/ppermute.
+
+The circuit IR is executed *across devices*: one scan element per device along
+a named mesh axis.  One-to-one rounds lower to ``lax.ppermute`` (the MPI
+point-to-point sends of the paper); multicast rounds — Ladner–Fischer's
+MPI_Bcast steps — lower to ``lax.all_gather`` + a dynamic select, the
+TPU-idiomatic multicast (DESIGN.md §3).
+
+Hierarchy: the paper replaces P flat ranks by P' ranks x T threads.  Here the
+hierarchy is mesh axes — ``("pod", "data")``: an inner scan on the fast ICI
+axis, a single outer scan on the slow inter-pod axis, exactly mirroring
+"restrict the global phase to the highest hierarchy level" (§4.2/§4.3).
+
+All functions are *collectives*: call them inside ``shard_map`` (or inside a
+jit that is already manual-sharded).  ``axis_size`` must be the static size of
+the named axis (JAX exposes it via ``lax.psum(1, axis)`` only dynamically, so
+we take it as an argument; ``jax.lax.axis_size`` is used when available).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .circuits import get_circuit
+from .scan import _local_inclusive_scan, _local_reduce, _tree_concat
+
+Op = Callable[[Any, Any], Any]
+
+
+def _axis_size(axis_name: str, axis_size: Optional[int]) -> int:
+    if axis_size is not None:
+        return axis_size
+    size = jax.lax.axis_size(axis_name)  # static inside shard_map
+    return int(size)
+
+
+def _where_tree(mask, a, b):
+    return jax.tree.map(lambda x, y: jnp.where(mask, x, y), a, b)
+
+
+def collective_scan(
+    op: Op,
+    x,
+    axis_name: str,
+    *,
+    algorithm: str = "ladner_fischer",
+    axis_size: Optional[int] = None,
+) -> Any:
+    """Inclusive prefix scan of one element per device across ``axis_name``.
+
+    Executes the chosen prefix circuit with ppermute/all_gather rounds.  Every
+    device runs every round's operator application and masks the result — the
+    SPMD analogue of idle workers in the paper's Figure 2.
+    """
+    p = _axis_size(axis_name, axis_size)
+    if p == 1:
+        return x
+    circuit = get_circuit(algorithm, p)
+    my = lax.axis_index(axis_name)
+    y = x
+    for rnd in circuit.rounds:
+        pairs = [(e[1], e[2]) for e in rnd]
+        if any(e[0] != "c" for e in rnd):
+            raise NotImplementedError(
+                f"collective_scan supports combine-only circuits, got {circuit.name}"
+            )
+        srcs = [s for s, _ in pairs]
+        dsts = [d for _, d in pairs]
+        fanout = max(srcs.count(s) for s in set(srcs))
+        dst_mask = jnp.isin(my, jnp.asarray(dsts))
+        if fanout == 1:
+            recv = lax.ppermute(y, axis_name, perm=pairs)
+        else:
+            # Multicast round (Ladner-Fischer broadcast): all_gather + select.
+            gathered = lax.all_gather(y, axis_name, axis=0)
+            src_of = [0] * p
+            for s, d in pairs:
+                src_of[d] = s
+            src_idx = jnp.asarray(src_of)[my]
+            recv = jax.tree.map(
+                lambda t: lax.dynamic_index_in_dim(t, src_idx, 0, keepdims=False),
+                gathered,
+            )
+        combined = op(recv, y)
+        y = _where_tree(dst_mask, combined, y)
+    return y
+
+
+def exclusive_shift(x, axis_name: str, *, axis_size: Optional[int] = None):
+    """Shift values one device to the right along the axis.  Device 0 receives
+    zeros — callers must mask with ``lax.axis_index(axis) > 0``."""
+    p = _axis_size(axis_name, axis_size)
+    return lax.ppermute(x, axis_name, perm=[(i, i + 1) for i in range(p - 1)])
+
+
+def _masked_total(y, axis_name: str, p: int):
+    """Value held by the last device on the axis, broadcast to all devices.
+
+    Implemented as a masked psum: one all-reduce, no gather of the full axis.
+    """
+    my = lax.axis_index(axis_name)
+    is_last = my == p - 1
+    masked = jax.tree.map(lambda t: jnp.where(is_last, t, jnp.zeros_like(t)), y)
+    return lax.psum(masked, axis_name)
+
+
+def hierarchical_collective_scan(
+    op: Op,
+    x,
+    axis_names: Sequence[str],
+    *,
+    algorithms: Optional[Sequence[str]] = None,
+    axis_sizes: Optional[Sequence[int]] = None,
+) -> Any:
+    """Inclusive scan across the flattened (outer..., inner) device hierarchy.
+
+    ``axis_names`` ordered outer-to-inner, e.g. ("pod", "data"): the element
+    order is pod-major.  Each level scans internally, then passes one summary
+    per group up — the paper's hierarchical scan (§4.2) with mesh axes playing
+    ranks/threads.  Only the outermost scan crosses the slow network.
+    """
+    if algorithms is None:
+        algorithms = ["ladner_fischer"] * len(axis_names)
+    if axis_sizes is None:
+        axis_sizes = [None] * len(axis_names)
+    if len(axis_names) == 1:
+        return collective_scan(
+            op, x, axis_names[0], algorithm=algorithms[0], axis_size=axis_sizes[0]
+        )
+    inner_names = axis_names[1:]
+    inner_algs = algorithms[1:]
+    inner_sizes = axis_sizes[1:]
+    # Scan within the inner hierarchy.
+    y = hierarchical_collective_scan(
+        op, x, inner_names, algorithms=inner_algs, axis_sizes=inner_sizes
+    )
+    # One summary per inner group = the last inner device's inclusive value.
+    p_inner = [_axis_size(n, s) for n, s in zip(inner_names, inner_sizes)]
+    total = y
+    for n, p in zip(inner_names, p_inner):
+        total = _masked_total(total, n, p)
+    # Outer scan over group summaries, then fold the *exclusive* outer prefix
+    # back into every member of the group.
+    outer = axis_names[0]
+    p_outer = _axis_size(outer, axis_sizes[0])
+    g = collective_scan(
+        op, total, outer, algorithm=algorithms[0], axis_size=p_outer
+    )
+    g_prev = exclusive_shift(g, outer, axis_size=p_outer)
+    has_prev = lax.axis_index(outer) > 0
+    return _where_tree(has_prev, op(g_prev, y), y)
+
+
+def distributed_blocked_scan(
+    op: Op,
+    xs_local,
+    axis_names: Sequence[str],
+    *,
+    strategy: str = "reduce_then_scan",
+    algorithms: Optional[Sequence[str]] = None,
+    axis_sizes: Optional[Sequence[int]] = None,
+) -> Any:
+    """Local–global–local distributed scan (paper Fig. 6) inside shard_map.
+
+    ``xs_local``: this device's contiguous segment (leading axis K) of the
+    global N = K * prod(axis sizes) element array, laid out axis-major.
+    Strategy and global circuit per the paper §4.1; the global phase is the
+    (possibly hierarchical) collective scan.
+    """
+    if strategy == "scan_then_map":
+        local = _local_inclusive_scan(op, xs_local)          # LP1: local scan
+        partial = jax.tree.map(lambda t: t[-1], local)
+        g = hierarchical_collective_scan(
+            op, partial, axis_names, algorithms=algorithms, axis_sizes=axis_sizes
+        )
+        prev = _exclusive_over_hierarchy(g, axis_names, axis_sizes)
+        has_prev = _nonzero_linear_index(axis_names)
+        k = jax.tree.leaves(local)[0].shape[0]
+        prev_b = jax.tree.map(
+            lambda t: jnp.broadcast_to(t[None], (k,) + t.shape), prev
+        )
+        return _where_tree(has_prev, op(prev_b, local), local)
+    if strategy == "reduce_then_scan":
+        partial = _local_reduce(op, xs_local)                # LP1: local reduce
+        g = hierarchical_collective_scan(
+            op, partial, axis_names, algorithms=algorithms, axis_sizes=axis_sizes
+        )
+        prev = _exclusive_over_hierarchy(g, axis_names, axis_sizes)
+        has_prev = _nonzero_linear_index(axis_names)
+        # Seed the first local element with the exclusive prefix, then scan.
+        x0 = jax.tree.map(lambda t: t[:1], xs_local)
+        seeded0 = op(jax.tree.map(lambda t: t[None], prev), x0)
+        x0 = _where_tree(has_prev, seeded0, x0)
+        rest = jax.tree.map(lambda t: t[1:], xs_local)
+        seeded = _tree_concat([x0, rest])
+        return _local_inclusive_scan(op, seeded)
+    raise ValueError(f"unknown strategy {strategy!r}")
+
+
+def _nonzero_linear_index(axis_names: Sequence[str]):
+    """True on every device except the hierarchically-first one."""
+    flag = None
+    for n in axis_names:
+        nz = lax.axis_index(n) > 0
+        flag = nz if flag is None else jnp.logical_or(flag, nz)
+    return flag
+
+
+def _exclusive_over_hierarchy(g, axis_names, axis_sizes):
+    """Exclusive value for the *flattened* hierarchy: the previous device in
+    axis-major order.  Shift along the innermost axis; the first device of
+    each inner group instead takes the last device of the previous group,
+    which equals the (inclusive) value shifted along the next-outer axis.
+    """
+    sizes = {
+        n: _axis_size(n, None if axis_sizes is None else axis_sizes[i])
+        for i, n in enumerate(axis_names)
+    }
+    inner = axis_names[-1]
+    p_in = sizes[inner]
+    prev = exclusive_shift(g, inner, axis_size=p_in)
+    carry_mask = lax.axis_index(inner) == 0
+    # Walk outward: for devices at index 0 of all inner axes so far, the
+    # predecessor lives one step back on the next-outer axis (its last slot).
+    for depth in range(len(axis_names) - 2, -1, -1):
+        ax = axis_names[depth]
+        p = sizes[ax]
+        # Value of the last inner-slot holder of the previous outer index:
+        # g is inclusive per device; the predecessor of (o, 0,...) is
+        # (o-1, last,...) whose inclusive value g we need: ppermute over ax
+        # from the device with inner index = last.  Since all devices of a
+        # group hold different g, first broadcast the group-last g inward.
+        last_g = g
+        for n in axis_names[depth + 1 :]:
+            last_g = _masked_total(last_g, n, sizes[n])
+        shifted = exclusive_shift(last_g, ax, axis_size=p)
+        prev = _where_tree(carry_mask, shifted, prev)
+        carry_mask = jnp.logical_and(carry_mask, lax.axis_index(ax) == 0)
+    return prev

@@ -1,0 +1,321 @@
+"""Executors for prefix circuits + the public scan API.
+
+Two single-process executors live here:
+
+* :func:`jax_exec` — vectorized execution of a circuit: per round, gather the
+  operand slices, apply the (batched) operator once, scatter.  Identity values
+  (Blelloch) are tracked *symbolically* at trace time, so no masks are emitted:
+  a combine with an identity operand compiles to a move.
+
+* :func:`python_exec` — per-element execution for expensive operators (the
+  image-registration operator takes seconds per application; batching is
+  meaningless there).  Also the oracle used by the property tests.
+
+``blocked_scan`` implements the paper's local–global–local decomposition
+(§4.1) for N >> P in pure JAX: *scan-then-map* (Fig. 6a) and *reduce-then-scan*
+(Fig. 6b), with any circuit as the global phase.  The distributed (shard_map)
+version is in ``distributed.py``; the thread work-stealing version in
+``work_stealing.py``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .circuits import Circuit, get_circuit
+
+Op = Callable[[Any, Any], Any]  # batched over the leading axis, pytree->pytree
+
+
+def _next_pow2(n: int) -> int:
+    m = 1
+    while m < n:
+        m *= 2
+    return m
+
+
+def _tree_gather(xs, idx):
+    idx = jnp.asarray(idx)
+    return jax.tree.map(lambda t: t[idx], xs)
+
+
+def _tree_scatter(ys, idx, vals):
+    idx = jnp.asarray(idx)
+    return jax.tree.map(lambda t, v: t.at[idx].set(v), ys, vals)
+
+
+def _tree_index(xs, i: int):
+    return jax.tree.map(lambda t: t[i], xs)
+
+
+def _tree_concat(parts):
+    return jax.tree.map(lambda *ts: jnp.concatenate(ts, axis=0), *parts)
+
+
+def jax_exec(
+    op: Op,
+    circuit: Circuit,
+    xs,
+    *,
+    n_valid: Optional[int] = None,
+) -> Tuple[Any, Any]:
+    """Execute ``circuit`` on ``xs`` (pytree, leading axis == circuit.n).
+
+    Returns ``(ys, total)`` where ``total`` is the all-elements reduction when
+    the circuit makes it available (Blelloch root before zeroing), else None.
+
+    ``n_valid``: with padded inputs, elements at index >= n_valid are treated
+    as identity (symbolically — they are never passed to ``op``).
+    """
+    n = circuit.n
+    is_id = [False] * n
+    if n_valid is not None:
+        for i in range(n_valid, n):
+            is_id[i] = True
+    y = xs
+    total = None
+    for rnd in circuit.rounds:
+        combines: List[Tuple[int, int, int]] = []  # (a, b, out): y[out] = op(a, b)
+        moves: List[Tuple[int, int]] = []          # (src, out):  y[out] = y[src]
+        new_id: List[Tuple[int, bool]] = []
+        for e in rnd:
+            kind = e[0]
+            if kind == "z":
+                i = e[1]
+                # The value at the root *before* zeroing is the full reduction.
+                total = _tree_index(y, i)
+                new_id.append((i, True))
+            elif kind == "c":
+                s, d = e[1], e[2]
+                if is_id[s]:
+                    pass  # y[d] unchanged
+                elif is_id[d]:
+                    moves.append((s, d))
+                    new_id.append((d, False))
+                else:
+                    combines.append((s, d, d))
+            elif kind == "x":
+                l, r = e[1], e[2]
+                # y[l] <- y[r]  (left child receives the parent prefix)
+                moves.append((r, l))
+                new_id.append((l, is_id[r]))
+                # y[r] <- y[r] . y[l]  (parent (.) left-subtree-sum)
+                if is_id[l]:
+                    pass  # y[r] unchanged
+                elif is_id[r]:
+                    moves.append((l, r))
+                    new_id.append((r, False))
+                else:
+                    combines.append((r, l, r))
+        # All gathers read the pre-round y.
+        upd_idx: List[int] = []
+        upd_val = []
+        if combines:
+            a_idx = [c[0] for c in combines]
+            b_idx = [c[1] for c in combines]
+            o_idx = [c[2] for c in combines]
+            res = op(_tree_gather(y, a_idx), _tree_gather(y, b_idx))
+            upd_idx.extend(o_idx)
+            upd_val.append(res)
+        if moves:
+            m_src = [m[0] for m in moves]
+            m_out = [m[1] for m in moves]
+            res = _tree_gather(y, m_src)
+            upd_idx.extend(m_out)
+            upd_val.append(res)
+        if upd_idx:
+            vals = _tree_concat(upd_val) if len(upd_val) > 1 else upd_val[0]
+            y = _tree_scatter(y, upd_idx, vals)
+        for i, v in new_id:
+            is_id[i] = v
+    return y, total
+
+
+def python_exec(op: Op, circuit: Circuit, xs: Sequence[Any]) -> Tuple[list, Any]:
+    """Reference per-element executor (lists of elements; op on single items)."""
+    n = circuit.n
+    y: List[Any] = list(xs)
+    is_id = [False] * n
+    total = None
+    for rnd in circuit.rounds:
+        reads = list(y)
+        rid = list(is_id)
+        for e in rnd:
+            kind = e[0]
+            if kind == "z":
+                total = reads[e[1]]
+                is_id[e[1]] = True
+            elif kind == "c":
+                s, d = e[1], e[2]
+                if rid[s]:
+                    pass
+                elif rid[d]:
+                    y[d] = reads[s]
+                    is_id[d] = False
+                else:
+                    y[d] = op(reads[s], reads[d])
+            elif kind == "x":
+                l, r = e[1], e[2]
+                y[l] = reads[r]
+                is_id[l] = rid[r]
+                if rid[l]:
+                    y[r] = reads[r]
+                    is_id[r] = rid[r]
+                elif rid[r]:
+                    y[r] = reads[l]
+                    is_id[r] = False
+                else:
+                    y[r] = op(reads[r], reads[l])
+                    is_id[r] = False
+    return y, total
+
+
+# ---------------------------------------------------------------------------
+# Public API
+# ---------------------------------------------------------------------------
+
+
+def prefix_scan(op: Op, xs, *, algorithm: str = "ladner_fischer") -> Any:
+    """Inclusive prefix scan of ``xs`` (pytree, leading axis N) with ``op``.
+
+    ``op`` must be associative and vectorized over the leading axis (the same
+    contract as ``jax.lax.associative_scan``).
+    """
+    n = jax.tree.leaves(xs)[0].shape[0]
+    if n == 0:
+        return xs
+    if n == 1 or algorithm == "sequential":
+        if n == 1:
+            return xs
+        circuit = get_circuit("sequential", n)
+        ys, _ = jax_exec(op, circuit, xs)
+        return ys
+    if algorithm == "blelloch":
+        m = _next_pow2(n)
+        if m != n:
+            pad = jax.tree.map(
+                lambda t: jnp.concatenate(
+                    [t, jnp.broadcast_to(t[:1], (m - n,) + t.shape[1:])], axis=0
+                ),
+                xs,
+            )
+        else:
+            pad = xs
+        circuit = get_circuit("blelloch", m)
+        excl, total = jax_exec(op, circuit, pad, n_valid=n)
+        # inclusive[i] = exclusive[i+1] for i < n-1 ; inclusive[n-1] = total
+        if m > n:
+            return jax.tree.map(lambda t: t[1 : n + 1], excl)
+        last = jax.tree.map(lambda t: t[None], total)
+        body = jax.tree.map(lambda t: t[1:n], excl)
+        return _tree_concat([body, last])
+    circuit = get_circuit(algorithm, n)
+    ys, _ = jax_exec(op, circuit, xs)
+    return ys
+
+
+def exclusive_scan(op: Op, xs, *, algorithm: str = "ladner_fischer") -> Any:
+    """Exclusive scan; out[0] is x[0]'s *identity stand-in* (= x[0], flagged by
+    callers that use it — all internal users consume out[1:])."""
+    inc = prefix_scan(op, xs, algorithm=algorithm)
+    return jax.tree.map(
+        lambda t, x: jnp.concatenate([x[:1], t[:-1]], axis=0), inc, xs
+    )
+
+
+# ---------------------------------------------------------------------------
+# Blocked scan (local-global-local, paper §4.1) — pure JAX, N >> P
+# ---------------------------------------------------------------------------
+
+
+def _local_inclusive_scan(op: Op, seg):
+    """Sequential (work-optimal) inclusive scan along axis 0 via lax.scan.
+
+    Mirrors the paper's local phase: depth K-1, work K-1 per segment.
+    """
+
+    def step(carry, x):
+        nxt = op(carry, x)
+        return nxt, nxt
+
+    first = jax.tree.map(lambda t: t[0], seg)
+    rest = jax.tree.map(lambda t: t[1:], seg)
+    _, ys = jax.lax.scan(step, first, rest)
+    return _tree_concat([jax.tree.map(lambda t: t[None], first), ys])
+
+
+def _local_reduce(op: Op, seg):
+    """Sequential reduction along axis 0 (the reduce-then-scan first phase)."""
+
+    def step(carry, x):
+        return op(carry, x), None
+
+    first = jax.tree.map(lambda t: t[0], seg)
+    rest = jax.tree.map(lambda t: t[1:], seg)
+    tot, _ = jax.lax.scan(step, first, rest)
+    return tot
+
+
+def blocked_scan(
+    op: Op,
+    xs,
+    *,
+    num_blocks: int,
+    strategy: str = "reduce_then_scan",
+    algorithm: str = "ladner_fischer",
+) -> Any:
+    """Local–global–local inclusive scan (paper §4.1) in a single process.
+
+    N must be divisible by ``num_blocks`` (the paper's even-distribution case;
+    uneven segments are handled by the work-stealing executor).
+    """
+    n = jax.tree.leaves(xs)[0].shape[0]
+    p = num_blocks
+    if n % p:
+        raise ValueError(f"N={n} not divisible by num_blocks={p}")
+    k = n // p
+    segs = jax.tree.map(lambda t: t.reshape((p, k) + t.shape[1:]), xs)
+
+    if strategy == "scan_then_map":
+        # Phase 1: local inclusive scan per segment (strict left-to-right).
+        local = jax.vmap(lambda s: _local_inclusive_scan(op, s))(segs)
+        partials = jax.tree.map(lambda t: t[:, -1], local)      # x_{l..r} per block
+        # Phase 2: global circuit scan over P partials.
+        gscan = prefix_scan(op, partials, algorithm=algorithm)
+        # Phase 3: combine exclusive global result into blocks 1..P-1.
+        excl = jax.tree.map(lambda t: t[:-1], gscan)            # block i gets gscan[i-1]
+        head = jax.tree.map(lambda t: t[:1], local)
+        rest = jax.tree.map(lambda t: t[1:], local)
+        upd = jax.vmap(lambda e, s: op(_bcast_like(e, s), s))(excl, rest)
+        out = jax.tree.map(lambda h, u: jnp.concatenate([h, u], 0), head, upd)
+    elif strategy == "reduce_then_scan":
+        # Phase 1: local reduction (order-free -> enables work stealing).
+        partials = jax.vmap(lambda s: _local_reduce(op, s))(segs)
+        # Phase 2: global circuit scan.
+        gscan = prefix_scan(op, partials, algorithm=algorithm)
+        # Phase 3: local scan seeded with the exclusive global result.
+        def seeded(seed, seg):
+            seg0 = op(jax.tree.map(lambda t: t[None], seed), jax.tree.map(lambda t: t[:1], seg))
+            seg = jax.tree.map(lambda s0, s: jnp.concatenate([s0, s[1:]], 0), seg0, seg)
+            return _local_inclusive_scan(op, seg)
+
+        excl = jax.tree.map(lambda t: t[:-1], gscan)
+        head_seg = jax.tree.map(lambda t: t[0], segs)
+        head = _local_inclusive_scan(op, head_seg)
+        rest = jax.tree.map(lambda t: t[1:], segs)
+        upd = jax.vmap(seeded)(excl, rest)
+        out = jax.tree.map(
+            lambda h, u: jnp.concatenate([h[None], u], 0), head, upd
+        )
+    else:
+        raise ValueError(f"unknown strategy {strategy!r}")
+    return jax.tree.map(lambda t: t.reshape((n,) + t.shape[2:]), out)
+
+
+def _bcast_like(e, s):
+    """Broadcast a single element pytree against a segment's leading axis."""
+    k = jax.tree.leaves(s)[0].shape[0]
+    return jax.tree.map(lambda t: jnp.broadcast_to(t[None], (k,) + t.shape), e)

@@ -1,0 +1,334 @@
+"""Node-local work-stealing prefix scan (the paper's core contribution, §4.3).
+
+The reduce-then-scan strategy leaves the *order* in which a segment is reduced
+unconstrained: given associativity, a contiguous interval can be accumulated
+left-to-right, right-to-left, or middle-outward.  The paper exploits this to
+let faster threads steal boundary elements from slower neighbours (Algorithm 1):
+
+    while s_{I-1} > 0 or s_{I+1} > 0:
+        if both gaps non-empty:  d = LEFT if t_{I-1} > t_{I+1} else RIGHT
+        else:                    d = the non-empty side
+        extend pl/pr by one element, folding it into res_I from that side
+
+where t_J is neighbour J's observed seconds-per-operator-application and s_I
+the number of unclaimed elements between threads I and I+1.
+
+This module is the *faithful host-level reproduction*: real Python threads,
+shared gap counters, greedy direction choice from observed rates.  The
+operator is expected to be expensive (seconds — image registration, or the
+paper's sleep-based mock operators), so Python-level synchronization overhead
+is negligible, exactly as MPI/OpenMP overhead was in the paper.
+
+The deterministic virtual-time twin used for >10^3-core studies lives in
+``simulator.py``; the compiled-SPMD derivative (ahead-of-step boundary
+rebalancing) in ``runtime/straggler.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Any, Callable, List, Optional, Sequence, Tuple
+
+from .circuits import analyze, get_circuit
+from .scan import python_exec
+
+Op = Callable[[Any, Any], Any]
+
+
+@dataclasses.dataclass
+class _Gap:
+    """Unclaimed elements between two adjacent threads: half-open [lo, hi)."""
+
+    lo: int
+    hi: int
+    lock: threading.Lock = dataclasses.field(default_factory=threading.Lock)
+
+    def size(self) -> int:
+        return max(0, self.hi - self.lo)
+
+    def take_left(self) -> Optional[int]:
+        """Left thread extends right: claim ``lo``."""
+        with self.lock:
+            if self.lo < self.hi:
+                i = self.lo
+                self.lo += 1
+                return i
+            return None
+
+    def take_right(self) -> Optional[int]:
+        """Right thread extends left: claim ``hi - 1``."""
+        with self.lock:
+            if self.lo < self.hi:
+                self.hi -= 1
+                return self.hi
+            return None
+
+
+@dataclasses.dataclass
+class ThreadStats:
+    ops: int = 0
+    busy_time: float = 0.0
+    pl: int = 0
+    pr: int = 0
+    finish_time: float = 0.0
+
+    def rate(self) -> float:
+        """Observed seconds per operator application (t_I in the paper)."""
+        if self.ops == 0:
+            return 0.0
+        return self.busy_time / self.ops
+
+
+@dataclasses.dataclass
+class StealStats:
+    threads: List[ThreadStats]
+    makespan: float
+    total_ops: int
+    boundaries: List[Tuple[int, int]]  # inclusive [pl, pr] per thread
+
+    def imbalance(self) -> float:
+        """Relative difference between max and mean busy time (paper Fig. 5b)."""
+        busy = [t.busy_time for t in self.threads]
+        mean = sum(busy) / len(busy)
+        return (max(busy) - mean) / mean if mean > 0 else 0.0
+
+
+def _start_positions(n: int, t: int) -> List[int]:
+    """Thread start elements: 0, segment middles, N-1 (paper §4.3)."""
+    if t == 1:
+        return [0]
+    seg = n / t
+    starts = [0]
+    for i in range(1, t - 1):
+        starts.append(int(i * seg + seg / 2))
+    starts.append(n - 1)
+    # Ensure strictly increasing (tiny N edge cases).
+    for i in range(1, len(starts)):
+        starts[i] = max(starts[i], starts[i - 1] + 1)
+    if starts[-1] >= n:
+        raise ValueError(f"too many threads ({t}) for {n} elements")
+    return starts
+
+
+def stealing_reduce(
+    op: Op,
+    items: Sequence[Any],
+    num_threads: int,
+    *,
+    clock: Callable[[], float] = time.monotonic,
+) -> Tuple[List[Any], StealStats]:
+    """Phase 1 of reduce-then-scan with work stealing (Algorithm 1).
+
+    Returns per-thread partial reductions over the contiguous intervals each
+    thread ended up owning, plus stealing statistics.
+    """
+    n = len(items)
+    t = num_threads
+    starts = _start_positions(n, t)
+    # gaps[i] sits between thread i-1 and thread i (i in 1..t-1).
+    gaps: List[Optional[_Gap]] = [None] * (t + 1)
+    for i in range(1, t):
+        gaps[i] = _Gap(starts[i - 1] + 1, starts[i])
+    stats = [ThreadStats(pl=s, pr=s) for s in starts]
+    results: List[Any] = [None] * t
+    t0 = clock()
+
+    def worker(tid: int) -> None:
+        st = stats[tid]
+        left = gaps[tid]
+        right = gaps[tid + 1]
+        begin = clock()
+        res = items[starts[tid]]
+        st.busy_time += clock() - begin
+        while True:
+            ls = left.size() if left else 0
+            rs = right.size() if right else 0
+            if ls == 0 and rs == 0:
+                break
+            if ls > 0 and rs > 0:
+                # Greedy: move toward the *slower* neighbour (higher sec/op).
+                d = "L" if stats[tid - 1].rate() > stats[tid + 1].rate() else "R"
+            else:
+                d = "L" if ls > 0 else "R"
+            if d == "L":
+                idx = left.take_right()
+                if idx is None:
+                    continue
+                b = clock()
+                res = op(items[idx], res)
+                st.busy_time += clock() - b
+                st.pl = idx
+            else:
+                idx = right.take_left()
+                if idx is None:
+                    continue
+                b = clock()
+                res = op(res, items[idx])
+                st.busy_time += clock() - b
+                st.pr = idx
+            st.ops += 1
+        results[tid] = res
+        st.finish_time = clock() - t0
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(t)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    makespan = max(s.finish_time for s in stats)
+    return results, StealStats(
+        threads=stats,
+        makespan=makespan,
+        total_ops=sum(s.ops for s in stats),
+        boundaries=[(s.pl, s.pr) for s in stats],
+    )
+
+
+def static_reduce(
+    op: Op,
+    items: Sequence[Any],
+    num_threads: int,
+    *,
+    clock: Callable[[], float] = time.monotonic,
+) -> Tuple[List[Any], StealStats]:
+    """Baseline: fixed even segments, no stealing (paper's 'static')."""
+    n = len(items)
+    t = num_threads
+    bounds = [(i * n // t, (i + 1) * n // t - 1) for i in range(t)]
+    stats = [ThreadStats(pl=lo, pr=hi) for lo, hi in bounds]
+    results: List[Any] = [None] * t
+    t0 = clock()
+
+    def worker(tid: int) -> None:
+        lo, hi = bounds[tid]
+        st = stats[tid]
+        b = clock()
+        res = items[lo]
+        for i in range(lo + 1, hi + 1):
+            res = op(res, items[i])
+            st.ops += 1
+        st.busy_time += clock() - b
+        results[tid] = res
+        st.finish_time = clock() - t0
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(t)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    makespan = max(s.finish_time for s in stats)
+    return results, StealStats(
+        threads=stats,
+        makespan=makespan,
+        total_ops=sum(s.ops for s in stats),
+        boundaries=bounds,
+    )
+
+
+def work_stealing_scan(
+    op: Op,
+    items: Sequence[Any],
+    num_threads: int,
+    *,
+    algorithm: str = "dissemination",
+    stealing: bool = True,
+    seed: Any = None,
+) -> Tuple[List[Any], StealStats]:
+    """Full node-local reduce-then-scan with (optional) work stealing.
+
+    Phase 1: (stealing) reduction over flexible segments.
+    Phase 2: circuit scan over the T partials (paper uses dissemination —
+             'its implementation is simpler … difference negligible for a
+             dozen threads').
+    Phase 3: per-interval sequential scan seeded with the exclusive prefix.
+
+    ``seed``: optional element logically preceding items[0] (used when this
+    node is one rank of a distributed scan: the seed is the exclusive result
+    received from the global phase).
+    """
+    n = len(items)
+    if num_threads == 1:
+        out = []
+        acc = seed
+        for x in items:
+            acc = x if acc is None else op(acc, x)
+            out.append(acc)
+        st = ThreadStats(ops=n - (0 if seed is not None else 1), pl=0, pr=n - 1)
+        return out, StealStats([st], 0.0, st.ops, [(0, n - 1)])
+
+    reduce_fn = stealing_reduce if stealing else static_reduce
+    partials, stats = reduce_fn(op, items, num_threads)
+
+    # Phase 2: scan over partials with a prefix circuit.
+    circ = get_circuit(algorithm, len(partials))
+    scanned, _ = python_exec(op, circ, partials)
+    stats.total_ops += analyze(circ).work
+
+    # Phase 3: seeded per-interval scans (parallel threads).
+    out: List[Any] = [None] * n
+    bounds = stats.boundaries
+    seeds: List[Any] = []
+    for i in range(len(bounds)):
+        if i == 0:
+            seeds.append(seed)
+        else:
+            s = scanned[i - 1]
+            seeds.append(s if seed is None else op(seed, s))
+
+    def apply_worker(tid: int) -> None:
+        lo, hi = bounds[tid]
+        acc = seeds[tid]
+        for j in range(lo, hi + 1):
+            acc = items[j] if acc is None else op(acc, items[j])
+            out[j] = acc
+
+    threads = [
+        threading.Thread(target=apply_worker, args=(i,)) for i in range(len(bounds))
+    ]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    stats.total_ops += sum(
+        (hi - lo + 1) - (1 if s is None else 0)
+        for (lo, hi), s in zip(bounds, seeds)
+    )
+    return out, stats
+
+
+def rebalance_boundaries(
+    costs: Sequence[float], boundaries: Sequence[Tuple[int, int]]
+) -> List[Tuple[int, int]]:
+    """Ahead-of-step greedy boundary rebalancing (TPU-idiomatic derivative).
+
+    Given measured per-element costs from the previous step, move each
+    boundary between neighbours so prefix-balanced load is achieved — the same
+    greedy "give work to the slower side" rule as Algorithm 1, applied once,
+    offline.  Used by ``runtime/straggler.py`` to rebalance host shards.
+    """
+    total = float(sum(costs))
+    t = len(boundaries)
+    target = total / t
+    out: List[Tuple[int, int]] = []
+    lo = 0
+    acc = 0.0
+    tid = 0
+    for i, c in enumerate(costs):
+        acc += c
+        # Close the current segment once it reaches its fair share, keeping
+        # at least one element per remaining segment.
+        remaining = len(costs) - (i + 1)
+        if (acc >= target * (tid + 1) and remaining >= (t - tid - 1)) or (
+            remaining == t - tid - 1
+        ):
+            out.append((lo, i))
+            lo = i + 1
+            tid += 1
+            if tid == t - 1:
+                break
+    out.append((lo, len(costs) - 1))
+    while len(out) < t:  # degenerate tiny inputs
+        out.append((len(costs) - 1, len(costs) - 2))
+    return out

@@ -1,0 +1,120 @@
+"""Pallas TPU kernels for the chunked SSM scan (reduce-then-scan in-model).
+
+Two kernels implement the two *local* phases of the paper's reduce-then-scan
+(§4.1) applied to the linear-attention/SSD recurrence; the *global* phase
+(inter-chunk scan of (decay, state) summaries) runs outside the kernel —
+``lax.associative_scan`` on-device, or the distributed hierarchical scan of
+``core/distributed.py`` when the sequence is sharded across the mesh.
+
+Kernel 1 (``chunk_local``): per (head, chunk)
+    att      = C B^T                      (L x L MXU matmul)
+    y_intra  = (att . D) V                (L x dv)   D = causal decay mask
+    s_chunk  = (B . decay_to_end)^T V     (dk x dv)
+
+Kernel 2 (``chunk_apply``): per (head, chunk)
+    y = y_intra + (C . exp(ca)) S_prev    (L x dv MXU matmul)
+
+VMEM tiling: one (chunk x head_dim) tile per grid step — L in {128, 256},
+dk = dv = head_dim in {64, 128}: all MXU dims are multiples of the 128x128
+systolic array (or padded 64), and the working set
+(3-4 tiles of L x 128 + an L x L score tile, fp32) stays well under 16 MB VMEM.
+Accumulation is fp32 via ``preferred_element_type``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _chunk_local_kernel(c_ref, b_ref, v_ref, ca_ref, y_ref, s_ref):
+    c = c_ref[0].astype(jnp.float32)          # (L, dk)
+    b = b_ref[0].astype(jnp.float32)          # (L, dk)
+    v = v_ref[0].astype(jnp.float32)          # (L, dv)
+    ca = ca_ref[0].astype(jnp.float32)        # (L, 1)
+    l = c.shape[0]
+
+    att = jax.lax.dot_general(
+        c, b, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                          # (L, L) = C B^T
+    row = jax.lax.broadcasted_iota(jnp.int32, (l, l), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (l, l), 1)
+    causal = row >= col
+    delta = ca - ca.reshape(1, l)              # ca[t] - ca[s]
+    d = jnp.exp(jnp.where(causal, delta, -1e30))  # mask pre-exp (no inf*0)
+    y = jax.lax.dot_general(
+        att * d, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )                                          # (L, dv)
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    decay_to_end = jnp.exp(ca[l - 1, 0] - ca)  # (L, 1)
+    s = jax.lax.dot_general(
+        b * decay_to_end, v, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                          # (dk, dv)
+    s_ref[0] = s.astype(s_ref.dtype)
+
+
+def _chunk_apply_kernel(c_ref, ca_ref, y_ref, sp_ref, o_ref):
+    c = c_ref[0].astype(jnp.float32)           # (L, dk)
+    ca = ca_ref[0].astype(jnp.float32)         # (L, 1)
+    y = y_ref[0].astype(jnp.float32)           # (L, dv)
+    sp = sp_ref[0].astype(jnp.float32)         # (dk, dv)
+    inter = jax.lax.dot_general(
+        c * jnp.exp(ca), sp, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    o_ref[0] = (y + inter).astype(o_ref.dtype)
+
+
+def chunk_local(c, b, v, ca, *, interpret: bool = False):
+    """Chunk-local reduce: y_intra and per-chunk state summaries.
+
+    Args:
+      c, b: (G, L, dk) — G = batch*heads*num_chunks flattened grid dim.
+      v: (G, L, dv);  ca: (G, L, 1) inclusive cumulative log-decay.
+    Returns:
+      y_intra: (G, L, dv);  s_chunk: (G, dk, dv).
+    """
+    g, l, dk = c.shape
+    dv = v.shape[-1]
+    grid = (g,)
+    out_shape = (
+        jax.ShapeDtypeStruct((g, l, dv), v.dtype),
+        jax.ShapeDtypeStruct((g, dk, dv), jnp.float32),
+    )
+    block = lambda *shape: pl.BlockSpec(
+        (1,) + shape, lambda i: (i,) + (0,) * len(shape)
+    )
+    return pl.pallas_call(
+        _chunk_local_kernel,
+        grid=grid,
+        in_specs=[block(l, dk), block(l, dk), block(l, dv), block(l, 1)],
+        out_specs=(block(l, dv), block(dk, dv)),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(c, b, v, ca)
+
+
+def chunk_apply(c, ca, y_intra, s_prev, *, interpret: bool = False):
+    """Chunk-local apply: fold the inter-chunk state into the outputs.
+
+    Args: c (G, L, dk); ca (G, L, 1); y_intra (G, L, dv); s_prev (G, dk, dv).
+    Returns: y (G, L, dv).
+    """
+    g, l, dk = c.shape
+    dv = y_intra.shape[-1]
+    block = lambda *shape: pl.BlockSpec(
+        (1,) + shape, lambda i: (i,) + (0,) * len(shape)
+    )
+    return pl.pallas_call(
+        _chunk_apply_kernel,
+        grid=(g,),
+        in_specs=[block(l, dk), block(l, 1), block(l, dv), block(dk, dv)],
+        out_specs=block(l, dv),
+        out_shape=jax.ShapeDtypeStruct((g, l, dv), y_intra.dtype),
+        interpret=interpret,
+    )(c, ca, y_intra, s_prev)

@@ -1,0 +1,114 @@
+"""Causal flash attention, Pallas TPU kernel (online-softmax tiling).
+
+Grid (BH, num_q_blocks, num_kv_blocks); the kv dimension is innermost and
+iterated sequentially, carrying running max / denominator / accumulator in
+VMEM scratch.  Causal skipping: kv blocks strictly above the diagonal are
+skipped with ``pl.when`` (no FLOPs, no VMEM traffic).
+
+Block sizes default to (256, 512) q x kv tiles of head_dim 128 — MXU-aligned,
+and the fp32 working set (q, k, v, s, acc ~ 4 tiles + a 256x512 score tile)
+stays < 4 MB VMEM.  GQA is handled by the caller (kv heads repeated to q
+heads); the oracle is ``ref.attention_reference``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *, scale, causal, blk_q, blk_k
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * blk_q
+    k_start = ki * blk_k
+    run = (k_start <= q_start + blk_q - 1) if causal else (ki >= 0)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)          # (blk_q, d)
+        k = k_ref[0].astype(jnp.float32)          # (blk_k, d)
+        v = v_ref[0].astype(jnp.float32)          # (blk_k, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale                                  # (blk_q, blk_k)
+        if causal:
+            rows = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            cols = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(rows >= cols, s, NEG_INF)
+        m_prev = m_scr[...]                        # (blk_q, 128) replicated
+        l_prev = l_scr[...]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)  # (blk_q, 1)
+        m_new = jnp.maximum(m_prev, jnp.broadcast_to(m_cur, m_prev.shape))
+        corr = jnp.exp(m_prev[:, :1] - m_new[:, :1])          # (blk_q, 1)
+        p = jnp.exp(s - m_new[:, :1])                          # (blk_q, blk_k)
+        l_new = corr * l_prev[:, :1] + jnp.sum(p, axis=-1, keepdims=True)
+        pv = jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        acc_scr[...] = acc_scr[...] * corr + pv
+        m_scr[...] = m_new
+        l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
+
+    @pl.when(ki == nk - 1)
+    def _fin():
+        denom = l_scr[...][:, :1]
+        denom = jnp.where(denom == 0.0, 1.0, denom)
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q,
+    k,
+    v,
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    block_q: int = 256,
+    block_k: int = 512,
+    interpret: bool = False,
+):
+    """q, k, v: (BH, L, d) with matching head counts (repeat GQA kv upstream)."""
+    bh, lq, d = q.shape
+    lk = k.shape[1]
+    scale = (d ** -0.5) if scale is None else scale
+    blk_q = min(block_q, lq)
+    blk_k = min(block_k, lk)
+    assert lq % blk_q == 0 and lk % blk_k == 0
+    grid = (bh, lq // blk_q, lk // blk_k)
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, blk_q=blk_q, blk_k=blk_k
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, blk_q, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, blk_k, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, blk_k, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, blk_q, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, lq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((blk_q, 128), jnp.float32),   # running max (replicated)
+            pltpu.VMEM((blk_q, 128), jnp.float32),   # running denominator
+            pltpu.VMEM((blk_q, d), jnp.float32),     # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,280 @@
+"""jit'd wrappers around the Pallas kernels.
+
+``ssd_scan`` is the full chunked SSM scan — the paper's reduce-then-scan as a
+model layer:
+
+  phase 1 (local reduce)  : Pallas ``chunk_local``      (MXU-heavy)
+  phase 2 (global scan)   : inter-chunk scan of (decay, state) summaries —
+                            a prefix circuit (core.scan) on-device, or the
+                            distributed hierarchical scan when the sequence
+                            is sharded over mesh axes (``axis_names``)
+  phase 3 (local apply)   : Pallas ``chunk_apply``
+
+Backends:
+  * "pallas"            — compiled Mosaic kernels (real TPU)
+  * "pallas_interpret"  — kernel body interpreted on CPU (validation)
+  * "xla"               — identical math in plain jnp (used by the dry-run:
+                          Mosaic can't lower on the CPU-only container; the
+                          XLA path has the same FLOP/byte structure)
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.distributed import hierarchical_collective_scan
+from repro.core.scan import prefix_scan
+
+from . import chunk_scan as _cs
+from . import ref as _ref
+from .flash_attention import flash_attention as _flash
+
+
+def _state_op(a, b):
+    """Associative combine of (decay, state) chunk summaries.
+
+    (a1, S1) . (a2, S2) = (a1*a2, a2*S1 + S2); batched over leading axes.
+    """
+    d1, s1 = a
+    d2, s2 = b
+    return d1 * d2, d2[..., None, None] * s1 + s2
+
+
+def ssd_scan(
+    q,
+    k,
+    v,
+    log_a,
+    *,
+    chunk: int = 128,
+    backend: str = "xla",
+    scan_algorithm: str = "ladner_fischer",
+    axis_names: Optional[Sequence[str]] = None,
+    axis_sizes: Optional[Sequence[int]] = None,
+):
+    """Gated linear-attention / SSD scan over the sequence.
+
+    Args:
+      q, k: (B, H, L, dk);  v: (B, H, L, dv);  log_a: (B, H, L), <= 0.
+      chunk: chunk length (the local segment size of reduce-then-scan).
+      axis_names: when set, L is this device's shard and the inter-chunk scan
+        continues hierarchically across the given mesh axes (sequence
+        parallelism for the 500k-token shapes).
+    Returns: y (B, H, L, dv).
+    """
+    bsz, h, l, dk = q.shape
+    dv = v.shape[-1]
+    assert l % chunk == 0, f"L={l} % chunk={chunk}"
+    nc = l // chunk
+    ca = jnp.cumsum(
+        log_a.reshape(bsz, h, nc, chunk).astype(jnp.float32), axis=-1
+    )
+
+    qc = q.reshape(bsz, h, nc, chunk, dk)
+    kc = k.reshape(bsz, h, nc, chunk, dk)
+    vc = v.reshape(bsz, h, nc, chunk, dv)
+
+    if backend in ("pallas", "pallas_interpret"):
+        interp = backend == "pallas_interpret"
+        flat = lambda t: t.reshape((bsz * h * nc,) + t.shape[3:])
+        y_intra, s_chunk = _cs.chunk_local(
+            flat(qc), flat(kc), flat(vc), flat(ca[..., None]), interpret=interp
+        )
+        y_intra = y_intra.reshape(bsz, h, nc, chunk, dv)
+        s_chunk = s_chunk.reshape(bsz, h, nc, dk, dv)
+    elif backend == "xla":
+        c32, b32, v32 = (t.astype(jnp.float32) for t in (qc, kc, vc))
+        att = jnp.einsum("bhntd,bhnsd->bhnts", c32, b32)
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+        # Mask *before* exp: above-diagonal deltas are positive and overflow,
+        # and where(mask, inf, 0) produces NaN gradients.
+        delta = jnp.where(mask, ca[..., :, None] - ca[..., None, :], -1e30)
+        decay = jnp.exp(delta)
+        y_intra = jnp.einsum("bhnts,bhnsv->bhntv", att * decay, v32)
+        to_end = jnp.exp(ca[..., -1:] - ca)
+        s_chunk = jnp.einsum("bhnsd,bhnsv->bhndv", b32 * to_end[..., None], v32)
+    else:
+        raise ValueError(f"unknown backend {backend!r}")
+
+    decay_tot = jnp.exp(ca[..., -1])                    # (B, H, nc)
+
+    # ---- global phase: inter-chunk (and inter-device) exclusive scan.
+    # Leading-axis layout for the circuit executor: (nc, B, H, ...).
+    elems = (
+        jnp.moveaxis(decay_tot, -1, 0),                 # (nc, B, H)
+        jnp.moveaxis(s_chunk, 2, 0),                    # (nc, B, H, dk, dv)
+    )
+    inc = prefix_scan(_state_op, elems, algorithm=scan_algorithm)
+    if axis_names:
+        # Continue the scan across devices: combine the exclusive inter-device
+        # prefix into every local chunk (hierarchical scan, paper §4.2).
+        last = jax.tree.map(lambda t: t[-1], inc)
+        g = hierarchical_collective_scan(
+            _state_op, last, axis_names, axis_sizes=axis_sizes
+        )
+        # exclusive across devices:
+        from repro.core.distributed import exclusive_shift, _nonzero_linear_index, _exclusive_over_hierarchy
+
+        prev = _exclusive_over_hierarchy(g, axis_names, axis_sizes)
+        has_prev = _nonzero_linear_index(axis_names)
+        d_in, s_in = inc
+        d_p, s_p = prev
+        d_p = jnp.where(has_prev, d_p, jnp.ones_like(d_p))
+        s_p = jnp.where(has_prev, s_p, jnp.zeros_like(s_p))
+        inc = (d_in * d_p[None], d_in[..., None, None] * s_p[None] + s_in)
+        s_prev_first = s_p                               # seed for chunk 0
+    else:
+        s_prev_first = jnp.zeros_like(jax.tree.map(lambda t: t[0], inc)[1])
+    # Exclusive over chunks: chunk i sees the inclusive state of i-1.
+    s_prev = jnp.concatenate([s_prev_first[None], inc[1][:-1]], axis=0)
+    s_prev = jnp.moveaxis(s_prev, 0, 2)                  # (B, H, nc, dk, dv)
+
+    # ---- phase 3: apply.
+    if backend in ("pallas", "pallas_interpret"):
+        interp = backend == "pallas_interpret"
+        flat = lambda t: t.reshape((bsz * h * nc,) + t.shape[3:])
+        y = _cs.chunk_apply(
+            flat(qc), flat(ca[..., None]), flat(y_intra), flat(s_prev),
+            interpret=interp,
+        )
+        y = y.reshape(bsz, h, nc, chunk, dv)
+    else:
+        inter = jnp.einsum(
+            "bhntd,bhndv->bhntv",
+            qc.astype(jnp.float32) * jnp.exp(ca)[..., None],
+            s_prev,
+        )
+        y = y_intra + inter
+    return y.reshape(bsz, h, l, dv).astype(v.dtype)
+
+
+def ssm_decode_step(q, k, v, log_a, state):
+    """Single-token recurrence (decode): state (B,H,dk,dv) -> (y, new_state).
+
+    q,k: (B,H,dk); v: (B,H,dv); log_a: (B,H)."""
+    a = jnp.exp(log_a.astype(jnp.float32))[..., None, None]
+    new_state = a * state + jnp.einsum("bhd,bhv->bhdv", k, v).astype(jnp.float32)
+    y = jnp.einsum("bhd,bhdv->bhv", q.astype(jnp.float32), new_state)
+    return y.astype(v.dtype), new_state
+
+
+def attention(
+    q,
+    k,
+    v,
+    *,
+    causal: bool = True,
+    backend: str = "xla",
+    block_q: int = 256,
+    block_k: int = 512,
+):
+    """Multi-head attention wrapper: q (B,Hq,Lq,d), k/v (B,Hkv,Lk,d).
+
+    GQA kv heads are repeated to Hq.  backend as in ``ssd_scan``.
+    """
+    bsz, hq, lq, d = q.shape
+    hkv = k.shape[1]
+    if hkv != hq:
+        rep = hq // hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    if backend in ("pallas", "pallas_interpret"):
+        interp = backend == "pallas_interpret"
+        qf = q.reshape(bsz * hq, lq, d)
+        kf = k.reshape(bsz * hq, -1, d)
+        vf = v.reshape(bsz * hq, -1, d)
+        o = _flash(
+            qf, kf, vf, causal=causal, block_q=block_q, block_k=block_k,
+            interpret=interp,
+        )
+        return o.reshape(bsz, hq, lq, d)
+    # XLA path (dry-run; identical math).  For long sequences use the
+    # blockwise form: a static python loop over query blocks where block i
+    # attends only K[: (i+1)*blk] — O(L * blk) live memory and *no* FLOPs
+    # above the causal diagonal (matches the Pallas kernel's pl.when skip).
+    scale = d ** -0.5
+    lk = k.shape[2]
+    if lq > 1024 or lq * lk > 1024 * 2048:
+        return _blockwise_attention(q, k, v, scale, causal=causal, block_q=512)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((lq, lk), bool), k=lk - lq)
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v)
+
+
+def _blockwise_attention(q, k, v, scale, *, block_q: int, causal: bool,
+                         n_buckets: int = 8):
+    """Attention as bucketed scans over query blocks.
+
+    Causal blocks attend only their key prefix, but 64 *distinct-sized* score
+    slabs defeat XLA buffer reuse (measured ~16 GiB live on 32k prefill).
+    Instead, key-prefix lengths are rounded up to one of ``n_buckets`` uniform
+    sizes and the q-blocks of each bucket run under one ``lax.scan`` — a
+    single reusable (B, H, blk, K_bucket) slab per bucket, ~10% masked-FLOP
+    overhead instead of the 2x full-mask waste.  jax.checkpoint per block
+    bounds backward memory."""
+    bsz, h, l, d = q.shape
+    block_q = min(block_q, l)
+    lk = k.shape[2]
+
+    def blk2(q_blk, k_pre, v_pre, q_start):
+        """q_blk (B,H,blk,d); k/v_pre (B,H,Kb,d); q_start scalar (traced)."""
+        s = jnp.einsum("bhqd,bhkd->bhqk", q_blk, k_pre).astype(jnp.float32) * scale
+        if causal:
+            rows = q_start + jnp.arange(q_blk.shape[2])[:, None]
+            cols = jnp.arange(k_pre.shape[2])[None, :]
+            s = jnp.where(rows >= cols, s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v_pre.dtype), v_pre)
+
+    blk2_ckpt = jax.checkpoint(blk2)
+
+    if not causal:
+        # all blocks share the full K: one scan.
+        nb = (l + block_q - 1) // block_q
+        if nb * block_q != l:
+            return blk2(q, k, v, jnp.int32(0))  # ragged small case: direct
+        qs = q.reshape(bsz, h, nb, block_q, d)
+
+        def body(_, inp):
+            qb, start = inp
+            return None, blk2_ckpt(qb, k, v, start)
+
+        starts = jnp.arange(nb, dtype=jnp.int32) * block_q
+        _, outs = jax.lax.scan(body, None, (jnp.moveaxis(qs, 2, 0), starts))
+        return jnp.moveaxis(outs, 0, 2).reshape(bsz, h, l, d)
+
+    assert l == lk, "causal path expects self-attention"
+    nb = l // block_q
+    assert nb * block_q == l, (l, block_q)
+    granule = max(block_q, l // n_buckets)
+    # group q-block indices by rounded-up key-prefix length
+    groups = {}
+    for i in range(nb):
+        hi = (i + 1) * block_q
+        kb = min(((hi + granule - 1) // granule) * granule, l)
+        groups.setdefault(kb, []).append(i)
+    out_blocks = [None] * nb
+    for kb, idxs in groups.items():
+        k_pre = jax.lax.slice_in_dim(k, 0, kb, axis=2)
+        v_pre = jax.lax.slice_in_dim(v, 0, kb, axis=2)
+        qs = jnp.stack([
+            jax.lax.slice_in_dim(q, i * block_q, (i + 1) * block_q, axis=2)
+            for i in idxs
+        ])                                            # (n, B, H, blk, d)
+        starts = jnp.asarray([i * block_q for i in idxs], jnp.int32)
+
+        def body(_, inp, k_pre=k_pre, v_pre=v_pre):
+            qb, start = inp
+            return None, blk2_ckpt(qb, k_pre, v_pre, start)
+
+        _, outs = jax.lax.scan(body, None, (qs, starts))
+        for j, i in enumerate(idxs):
+            out_blocks[i] = outs[j]
+    return jnp.concatenate(out_blocks, axis=2)

@@ -1,0 +1,426 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST be imported/run before any other jax usage: the first two lines pin 512
+placeholder host devices so ``jax.make_mesh`` can build the production mesh.
+
+For each cell this script:
+  1. builds the production mesh ((16,16) or (2,16,16)),
+  2. constructs ShapeDtypeStruct inputs (steps.input specs) and sharding trees,
+  3. ``jax.jit(step).lower(...)`` + ``.compile()``,
+  4. prints ``memory_analysis()`` (proves the cell fits HBM) and
+     ``cost_analysis()`` (FLOPs/bytes for the roofline),
+  5. parses the post-SPMD HLO for collective ops and sums their bytes,
+  6. writes experiments/dryrun/<cell>.json for benchmarks/roofline.py.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-72b --shape train_4k
+  python -m repro.launch.dryrun --all [--multipod] [--and-single]
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+# ruff: noqa: E402
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, list_archs
+from repro.launch import sharding as shd
+from repro.launch import steps
+from repro.launch.mesh import make_production_mesh
+from repro.models.config import SHAPES, ArchConfig, ShapeConfig
+from repro.optim import adamw
+
+ARTIFACT_DIR = os.path.join(
+    os.path.dirname(__file__), "..", "..", "..", "experiments", "dryrun"
+)
+
+# v5e hardware constants (per chip).
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s/link
+
+_COLLECTIVE_RE = re.compile(
+    r"(\w+\[[^\]]*\][^=]*)=\s*\S*\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(",
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Sum result bytes per collective kind from post-SPMD HLO."""
+    out: Dict[str, Dict[str, float]] = {}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.search(
+            r"=\s*((?:\w+\[[^\]]*\]|\((?:[^()]*)\))\S*)\s+"
+            r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+            r"(?:-start)?\(",
+            line,
+        )
+        if not m:
+            continue
+        result_text, kind = m.group(1), m.group(2)
+        nbytes = _shape_bytes(result_text)
+        rec = out.setdefault(kind, {"count": 0, "bytes": 0.0})
+        rec["count"] += 1
+        rec["bytes"] += nbytes
+    return out
+
+
+def applicable(cfg: ArchConfig, shape: ShapeConfig) -> Optional[str]:
+    """Returns a skip-reason string, or None when the cell runs."""
+    if shape.name == "long_500k" and cfg.family not in ("ssm", "hybrid"):
+        return "long_500k skipped: quadratic full attention (DESIGN.md)"
+    return None
+
+
+def lower_cell(cfg: ArchConfig, shape: ShapeConfig, mesh, *, donate: bool = True):
+    """Build and lower the right step for one cell. Returns (lowered, meta)."""
+    from repro.models.shardctx import activation_sharding
+
+    with activation_sharding(
+        mesh, dp=shd.dp_axes(mesh), tp=shd.tp_axis(mesh),
+        seq_shard=cfg.seq_shard_prefill and shape.kind != "decode",
+        fsdp_gather=os.environ.get("REPRO_FSDP_GATHER", "0") == "1",
+    ):
+        return _lower_cell_inner(cfg, shape, mesh, donate=donate)
+
+
+def _lower_cell_inner(cfg: ArchConfig, shape: ShapeConfig, mesh, *, donate: bool):
+    if shape.kind == "decode":
+        # Serving layout: unrolled layers + per-layer state dicts (donated
+        # cache buffers alias in place, no scan xs/ys copies) + fp8 KV cache
+        # (halves cache memory AND the bandwidth-bound decode roofline term;
+        # logits corr 0.996 / argmax-identical vs bf16 — see tests).
+        cfg = dataclasses.replace(cfg, scan_layers=False,
+                                  cache_dtype="float8_e4m3fn")
+    params = steps.params_struct(cfg)
+    pshard = shd.param_shardings(params, cfg, mesh)
+    meta = {"kind": shape.kind}
+    if shape.kind == "train":
+        opt_cfg = adamw.AdamWConfig()
+        opt = steps.opt_state_struct(cfg, params, opt_cfg)
+        oshard = shd.opt_state_shardings(opt, pshard, mesh)
+        batch = steps.batch_struct(cfg, shape)
+        bspecs = shd.batch_specs(cfg, mesh, kind="train",
+                                 seq_shard=cfg.seq_shard_prefill)
+        bshard = {k: jax.sharding.NamedSharding(mesh, bspecs[k])
+                  for k in batch}
+        fn = steps.make_train_step(
+            cfg, opt_cfg,
+            grad_accum=int(os.environ.get("REPRO_GRAD_ACCUM", "1")),
+        )
+        jitted = jax.jit(
+            fn,
+            in_shardings=(pshard, oshard, bshard),
+            out_shardings=(pshard, oshard, None),
+            donate_argnums=(0, 1) if donate else (),
+        )
+        lowered = jitted.lower(params, opt, batch)
+    elif shape.kind == "prefill":
+        states = steps.decode_state_struct(cfg, shape)
+        sshard = shd.state_specs(cfg, mesh, states, batch=shape.global_batch)
+        batch = steps.batch_struct(cfg, shape)
+        bspecs = shd.batch_specs(cfg, mesh, kind="prefill",
+                                 seq_shard=cfg.seq_shard_prefill)
+        bshard = {k: jax.sharding.NamedSharding(mesh, bspecs[k]) for k in batch}
+        bshard.pop("labels", None)
+        batch.pop("labels", None)
+        fn = steps.make_prefill_step(cfg)
+        jitted = jax.jit(
+            fn,
+            in_shardings=(pshard, bshard, sshard),
+            out_shardings=(None, sshard),
+            donate_argnums=(2,) if donate else (),
+        )
+        lowered = jitted.lower(params, batch, states)
+    elif shape.kind == "decode":
+        states = steps.decode_state_struct(cfg, shape)
+        sshard = shd.state_specs(cfg, mesh, states, batch=shape.global_batch)
+        token, pos = steps.decode_inputs_struct(cfg, shape)
+        dp = shd.dp_axes(mesh)
+        b_ok = shape.global_batch % shd.axis_size(mesh, dp) == 0
+        tshard = jax.sharding.NamedSharding(
+            mesh, jax.sharding.PartitionSpec(dp if b_ok else None, None)
+        )
+        rshard = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+        fn = steps.make_decode_step(cfg)
+        jitted = jax.jit(
+            fn,
+            in_shardings=(pshard, tshard, rshard, sshard),
+            out_shardings=(None, sshard),
+            donate_argnums=(3,) if donate else (),
+        )
+        lowered = jitted.lower(params, token, pos, states)
+    else:
+        raise ValueError(shape.kind)
+    return lowered, meta
+
+
+def _model_flops(cfg: ArchConfig, shape: ShapeConfig) -> float:
+    """MODEL_FLOPS: 6ND train (fwd 2ND + bwd 4ND), 2ND prefill, 2N/token decode.
+
+    N = active params (6*N_active*D for MoE per the roofline instructions)."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch
+
+
+def _reduced_cfg(cfg: ArchConfig, ns: int) -> ArchConfig:
+    """Same architecture at reduced depth (ns superblocks), layers unrolled."""
+    repl = dict(
+        n_layers=ns * len(cfg.block_pattern),
+        scan_layers=False,
+    )
+    if cfg.encoder_layers:
+        repl["encoder_layers"] = ns  # whisper: n_super == encoder_layers
+    return dataclasses.replace(cfg, **repl)
+
+
+def _measure(cfg: ArchConfig, shape: ShapeConfig, mesh) -> Dict:
+    """Lower+compile one configuration; return raw per-device measurements."""
+    t0 = time.time()
+    lowered, _ = lower_cell(cfg, shape, mesh)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    colls = parse_collectives(compiled.as_text())
+    return {
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "arg_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+        "out_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+        "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "collectives": colls,
+        "coll_bytes": sum(v["bytes"] for v in colls.values()),
+    }
+
+
+def _slstm_correction(cfg: ArchConfig, shape: ShapeConfig) -> float:
+    """Analytic FLOPs of the sLSTM time-recurrence (a lax.scan over L that
+    cannot be unrolled): per step, the block-diagonal recurrent matmul is
+    B * nh * hd * 4hd MACs.  x3 for train (bwd)."""
+    n_slstm = sum(1 for k in cfg.block_pattern if k == "slstm") * cfg.n_super
+    if n_slstm == 0 or shape.kind == "decode":
+        return 0.0
+    nh = cfg.n_heads
+    hd = cfg.d_model // nh
+    per_tok = nh * hd * 4 * hd * 2
+    total = n_slstm * shape.global_batch * shape.seq_len * per_tok
+    if shape.kind == "train":
+        total *= 3
+    return float(total)
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             save: bool = True, verbose: bool = True) -> Dict:
+    """One dry-run cell.
+
+    Single-pod: (a) full-depth *scanned* compile -> memory proof + sharding,
+    (b) two reduced-depth *unrolled* compiles (ns=2,4) -> exact per-superblock
+    FLOP/byte/collective counts, extrapolated linearly to full depth.
+    Superblocks are homogeneous, so the extrapolation is exact; unrolling is
+    required because XLA cost_analysis counts while-loop bodies once.
+
+    Multi-pod: full-depth scanned compile only (proves the 'pod' axis shards;
+    the roofline table is single-pod per the assignment).
+    """
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    skip = applicable(cfg, shape)
+    cell = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "status": "skip" if skip else "pending",
+    }
+    if skip:
+        cell["reason"] = skip
+        cell["status"] = "skip"
+        if verbose:
+            print(f"[dryrun] {arch} x {shape_name}: SKIP ({skip})", flush=True)
+        if save:
+            _save_cell(cell)
+        return cell
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+
+    full = _measure(cfg, shape, mesh)
+    cell.update(
+        status="ok",
+        n_chips=n_chips,
+        lower_s=full["lower_s"],
+        compile_s=full["compile_s"],
+        arg_bytes=full["arg_bytes"],
+        out_bytes=full["out_bytes"],
+        temp_bytes=full["temp_bytes"],
+        peak_bytes=full["arg_bytes"] + full["temp_bytes"],
+        scanned_flops_per_device=full["flops"],
+        scanned_collectives=full["collectives"],
+    )
+
+    if not multi_pod:
+        ns_a, ns_b = 2, 4
+        m_a = _measure(_reduced_cfg(cfg, ns_a), shape, mesh)
+        m_b = _measure(_reduced_cfg(cfg, ns_b), shape, mesh)
+        ns_full = cfg.n_super
+
+        def extrap(key):
+            per = (m_b[key] - m_a[key]) / (ns_b - ns_a)
+            base = m_a[key] - ns_a * per
+            return max(0.0, base + ns_full * per), per
+
+        flops, flops_per_sb = extrap("flops")
+        flops += _slstm_correction(cfg, shape) / n_chips
+        bytes_acc, _ = extrap("bytes")
+        coll_bytes, _ = extrap("coll_bytes")
+        coll_kinds = {}
+        for kind in set(m_a["collectives"]) | set(m_b["collectives"]):
+            ba = m_a["collectives"].get(kind, {"bytes": 0.0, "count": 0})
+            bb = m_b["collectives"].get(kind, {"bytes": 0.0, "count": 0})
+            per = (bb["bytes"] - ba["bytes"]) / (ns_b - ns_a)
+            cnt_per = (bb["count"] - ba["count"]) / (ns_b - ns_a)
+            coll_kinds[kind] = {
+                "bytes": max(0.0, ba["bytes"] + (ns_full - ns_a) * per),
+                "count": int(max(0, ba["count"] + (ns_full - ns_a) * cnt_per)),
+            }
+        cell.update(
+            flops_per_device=flops,
+            flops_per_superblock=flops_per_sb,
+            bytes_per_device=bytes_acc,
+            collective_bytes_per_device=coll_bytes,
+            collectives=coll_kinds,
+            t_compute=flops / PEAK_FLOPS,
+            t_memory=bytes_acc / HBM_BW,
+            t_collective=coll_bytes / ICI_BW,
+            model_flops_total=_model_flops(cfg, shape),
+        )
+        terms = {"compute": cell["t_compute"], "memory": cell["t_memory"],
+                 "collective": cell["t_collective"]}
+        cell["bottleneck"] = max(terms, key=terms.get)
+        cell["model_flops_ratio"] = (
+            cell["model_flops_total"] / (flops * n_chips) if flops else 0.0
+        )
+    if verbose:
+        msg = (f"[dryrun] {arch} x {shape_name} x {cell['mesh']}: OK "
+               f"compile={full['compile_s']:.0f}s "
+               f"peak={cell['peak_bytes']/2**30:.2f}GiB/dev")
+        if not multi_pod:
+            msg += (f" flops/dev={cell['flops_per_device']:.3g}"
+                    f" bytes/dev={cell['bytes_per_device']:.3g}"
+                    f" coll/dev={cell['collective_bytes_per_device']:.3g}"
+                    f" bottleneck={cell['bottleneck']}")
+        print(msg, flush=True)
+    if save:
+        _save_cell(cell)
+    return cell
+
+
+def _save_cell(cell: Dict) -> None:
+    os.makedirs(ARTIFACT_DIR, exist_ok=True)
+    fname = (f"{cell['arch']}__{cell['shape']}__"
+             f"{cell['mesh'].replace('x', '_')}.json")
+    with open(os.path.join(ARTIFACT_DIR, fname), "w") as f:
+        json.dump(cell, f, indent=2)
+
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--and-single", action="store_true",
+                    help="with --all: run both meshes")
+    ap.add_argument("--no-save", action="store_true")
+    ap.add_argument("--resume", action="store_true",
+                    help="skip cells whose artifact JSON already exists")
+    args = ap.parse_args()
+
+    # Cheap-first ordering banks results early on the single-core container.
+    arch_order = ["whisper-base", "internvl2-1b", "xlstm-350m", "codeqwen1.5-7b",
+                  "internlm2-20b", "zamba2-7b", "phi3.5-moe-42b-a6.6b",
+                  "qwen3-32b", "arctic-480b", "qwen2-72b"]
+    shape_order = ["decode_32k", "long_500k", "prefill_32k", "train_4k"]
+    archs = arch_order if args.all or not args.arch else [args.arch]
+    shapes = shape_order if args.all or not args.shape else [args.shape]
+    meshes = [args.multipod]
+    if args.and_single and args.multipod:
+        meshes = [False, True]
+    results = []
+    for shape in shapes:
+        for arch in archs:
+            for mp in meshes:
+                mesh_name = "2_16_16" if mp else "16_16"
+                path = os.path.join(
+                    ARTIFACT_DIR, f"{arch}__{shape}__{mesh_name}.json")
+                if args.resume and os.path.exists(path):
+                    with open(path) as f:
+                        cell = json.load(f)
+                    if cell.get("status") in ("ok", "skip"):
+                        results.append(cell)
+                        print(f"[dryrun] {arch} x {shape} x {cell['mesh']}: "
+                              f"cached ({cell['status']})", flush=True)
+                        continue
+                try:
+                    results.append(
+                        run_cell(arch, shape, multi_pod=mp, save=not args.no_save)
+                    )
+                except Exception as e:  # a failed cell is a bug: report loudly
+                    traceback.print_exc()
+                    results.append({
+                        "arch": arch, "shape": shape,
+                        "mesh": "2x16x16" if mp else "16x16",
+                        "status": "fail", "error": f"{type(e).__name__}: {e}",
+                    })
+    ok = sum(1 for r in results if r["status"] == "ok")
+    skip = sum(1 for r in results if r["status"] == "skip")
+    fail = sum(1 for r in results if r["status"] == "fail")
+    print(f"\n[dryrun] done: {ok} ok, {skip} skip, {fail} FAIL of {len(results)}")
+    if fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,195 @@
+"""Sharding rules: parameters (TP + FSDP), activations, caches.
+
+Policy (DESIGN.md §6):
+  * TP over "model": attention head projections, MLP hidden, experts, vocab.
+  * FSDP over ("pod","data"): the other big dim of every weight matrix.
+  * A dim is sharded only when divisible by the axis size (small models —
+    whisper, internvl2 — simply replicate what doesn't divide).
+  * Stacked-superblock params get a leading None (the scan dim).
+  * KV caches: batch over DP, *sequence over TP* — GQA kv-head counts don't
+    divide 16-way TP, but 32k sequences do; GSPMD resolves the sharded-axis
+    softmax with small all-reduces (see launch/dryrun.py roofline).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ArchConfig
+
+from .mesh import axis_size, dp_axes, tp_axis
+
+# Parents whose 2D weight is a *down* projection: (out_features inherit FSDP).
+_DOWN = {"wo", "w2", "out_proj", "head"}
+_UP = {"wq", "wk", "wv", "w1", "w3", "wz", "w_in", "in_proj", "w_gates"}
+
+
+def _div(n: int, axes, mesh) -> bool:
+    return axes is not None and n % axis_size(mesh, axes) == 0
+
+
+def _spec_for(path_keys, shape, mesh) -> P:
+    dp = dp_axes(mesh)
+    tp = tp_axis(mesh)
+    keys = [str(k) for k in path_keys]
+    stacked = "blocks" in keys or "encoder" in keys
+    name_chain = keys
+    parent = None
+    for cand in reversed(name_chain):
+        if cand in _DOWN | _UP | {"router", "table", "moe", "r", "conv_w",
+                                  "conv_b", "a_log", "dt_bias", "d_skip",
+                                  "scale", "bias", "b"}:
+            parent = cand
+            break
+    base_shape = shape[1:] if stacked else shape
+    nd = len(base_shape)
+
+    def dims(spec_list):
+        spec = P(*( [None] + spec_list if stacked else spec_list ))
+        return spec
+
+    in_moe = "moe" in keys
+    if parent == "table":  # embedding (V, D)
+        # D over TP, vocab replicated.  A vocab-sharded table turns the token
+        # gather into a masked-select + fp32 all-reduce with a *replicated*
+        # batch (measured: 67 GiB of f32 copies on qwen3 prefill_32k).  With
+        # D/tp the lookup is collective-free; the table is ~100 MB/device.
+        v, d = base_shape
+        return dims([None, tp if _div(d, tp, mesh) else None])
+    if "head" in keys and nd == 3:  # chunk-major unembedding (NC, D, Vc)
+        _, d, vc = base_shape
+        return dims([None, dp if _div(d, dp, mesh) else None,
+                     tp if _div(vc, tp, mesh) else None])
+    if parent == "router":
+        d, e = base_shape
+        return dims([dp if _div(d, dp, mesh) else None, None])
+    if in_moe and parent in ("w1", "w3") and nd == 3:  # (E, D, F)
+        e, d, f = base_shape
+        return dims([tp if _div(e, tp, mesh) else None,
+                     dp if _div(d, dp, mesh) else None, None])
+    if in_moe and parent == "w2" and nd == 3:          # (E, F, D)
+        e, f, d = base_shape
+        return dims([tp if _div(e, tp, mesh) else None, None,
+                     dp if _div(d, dp, mesh) else None])
+    if parent in _UP and nd == 2:                      # (D_in, F_out)
+        din, dout = base_shape
+        return dims([dp if _div(din, dp, mesh) else None,
+                     tp if _div(dout, tp, mesh) else None])
+    if parent in _DOWN and nd == 2:                    # (F_in, D_out)
+        fin, dout = base_shape
+        return dims([tp if _div(fin, tp, mesh) else None,
+                     dp if _div(dout, dp, mesh) else None])
+    if parent == "b" and nd == 1:                      # bias of the layer above
+        # biases follow the output dim of their parent projection
+        grand = keys[-3] if len(keys) >= 3 else ""
+        ax = dp if grand in _DOWN else tp
+        return dims([ax if _div(base_shape[0], ax, mesh) else None])
+    if parent == "r" and nd == 3:                      # sLSTM recurrent (nh, hd, 4hd)
+        nh = base_shape[0]
+        return dims([tp if _div(nh, tp, mesh) else None, None, None])
+    # norms, conv, gates, scalars: replicate (tiny).
+    return dims([None] * nd)
+
+
+def param_shardings(params, cfg: ArchConfig, mesh: Mesh):
+    """NamedSharding tree for a params (or opt-state params-like) pytree."""
+
+    def spec(path, leaf):
+        return NamedSharding(mesh, _spec_for([p.key if hasattr(p, "key") else p
+                                              for p in path], leaf.shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(spec, params)
+
+
+def opt_state_shardings(opt_state, params_shardings, mesh: Mesh):
+    """m/v/master inherit the param shardings; step is replicated."""
+    from repro.optim.adamw import OptState
+
+    rep = NamedSharding(mesh, P())
+    ps = params_shardings
+    return OptState(
+        step=rep,
+        m=ps,
+        v=jax.tree.map(lambda s: s, ps),
+        master=ps if opt_state.master != () else (),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Activations / inputs / caches
+# ---------------------------------------------------------------------------
+
+
+def batch_specs(cfg: ArchConfig, mesh: Mesh, *, kind: str, seq_shard: bool = False):
+    """PartitionSpecs for the input batch dict."""
+    dp = dp_axes(mesh)
+    tp = tp_axis(mesh)
+    if kind == "decode":
+        token_spec = P(dp, None)
+    elif seq_shard:
+        # Sequence parallelism: shard L over the DP axes (batch may be small).
+        token_spec = P(None, dp)
+    else:
+        token_spec = P(dp, None)
+    specs = {"tokens": token_spec, "labels": token_spec}
+    if cfg.frontend == "patch":
+        specs["patches"] = P(token_spec[0], None, None)
+    if cfg.frontend == "audio":
+        specs["frames"] = P(token_spec[0], None, None)
+    return specs
+
+
+def state_specs(cfg: ArchConfig, mesh: Mesh, states, *, batch: int):
+    """Decode-state sharding: KV caches (n_super, B, Hkv, S, hd) -> sequence
+    over TP, batch over DP (when divisible); SSM states shard heads over TP."""
+    dp = dp_axes(mesh)
+    tp = tp_axis(mesh)
+    b_ok = batch % axis_size(mesh, dp) == 0
+
+    # When the batch can't shard over DP (long_500k: B=1), fold the DP axes
+    # into the cache-sequence sharding instead — the 500k cache is the only
+    # tensor big enough to need all 512 ways.
+    s_axes = tp if b_ok else (tuple(dp) + ((tp,) if tp else ()))
+
+    def spec(path, leaf):
+        keys = [str(getattr(p, "key", p)) for p in path]
+        shape = leaf.shape
+        if "enc_out" in keys:
+            return NamedSharding(mesh, P(dp if b_ok else None, None, None))
+        # KV caches: stacked (n_super, B, Hkv, S, hd) or per-layer 4D.
+        if keys and keys[-1] in ("k", "v") and len(shape) in (4, 5):
+            stacked = len(shape) == 5
+            s = shape[3] if stacked else shape[2]
+            body = P(
+                dp if b_ok else None,
+                None,
+                s_axes if _div(s, s_axes, mesh) else None,
+                None,
+            )
+            return NamedSharding(mesh, P(None, *body) if stacked else body)
+        # SSM/mLSTM matrix states: (n_super?, B, nh, ds, hd)
+        if keys and keys[-1] in ("ssm", "C") and len(shape) >= 3:
+            stacked = len(shape) >= 5
+            nh = shape[2] if stacked else shape[1]
+            body = P(dp if b_ok else None,
+                     tp if _div(nh, tp, mesh) else None)
+            return NamedSharding(mesh, P(None, *body) if stacked else body)
+        # generic small states (conv, normalizers, h/c/n): batch-shard when
+        # possible; leading n_super dim for the stacked layout.
+        if len(shape) >= 2:
+            if keys and any(k.startswith("sb") for k in keys):
+                return NamedSharding(mesh, P(dp if b_ok else None))
+            return NamedSharding(mesh, P(None, dp if b_ok else None))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map_with_path(spec, states)
+
+
+def logits_spec(cfg: ArchConfig, mesh: Mesh):
+    dp = dp_axes(mesh)
+    tp = tp_axis(mesh)
+    v_ok = cfg.padded_vocab % axis_size(mesh, tp) == 0 if tp else False
+    return P(dp, None, tp if v_ok else None)

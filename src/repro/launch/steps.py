@@ -1,0 +1,128 @@
+"""The jitted step functions (train / prefill / decode) and their input specs.
+
+``input_specs`` returns ShapeDtypeStruct stand-ins for every input of the
+step being lowered — weak-type-correct, shardable, no device allocation —
+exactly what the multi-pod dry-run lowers against.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.models.config import ArchConfig, ShapeConfig
+from repro.optim import adamw
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: adamw.AdamWConfig = adamw.AdamWConfig(),
+                    *, grad_accum: int = 1):
+    """One optimizer step; ``grad_accum`` > 1 splits the batch into
+    microbatches scanned sequentially (activation memory scales with the
+    microbatch; grads/metrics are averaged — identical numerics)."""
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(lm.loss_fn, has_aux=True)(params, cfg, batch)
+
+    def train_step(params, opt_state, batch):
+        if grad_accum == 1:
+            (loss, metrics), grads = grads_of(params, batch)
+        else:
+            split = lambda t: t.reshape((grad_accum, t.shape[0] // grad_accum)
+                                        + t.shape[1:])
+            micro = jax.tree.map(split, batch)
+
+            def body(acc, mb):
+                (l, m), g = grads_of(params, mb)
+                acc = jax.tree.map(jnp.add, acc, (g, l, m["aux"]))
+                return acc, None
+
+            zeros = (
+                jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+                jnp.zeros((), jnp.float32),
+                jnp.zeros((), jnp.float32),
+            )
+            (gsum, lsum, asum), _ = jax.lax.scan(body, zeros, micro)
+            grads = jax.tree.map(lambda g: g / grad_accum, gsum)
+            loss = lsum / grad_accum
+            metrics = {"ce": loss, "aux": asum / grad_accum}
+        lr_scale = adamw.cosine_schedule(
+            opt_state.step, warmup=100, total=10000
+        )
+        params, opt_state, opt_metrics = adamw.update(
+            grads, opt_state, params, opt_cfg, lr_scale
+        )
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig):
+    def prefill_step(params, batch, states):
+        return lm.prefill(params, cfg, batch, states)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig):
+    def decode_step(params, token, pos, states):
+        return lm.decode_step(params, cfg, token, pos, states)
+
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# ShapeDtypeStruct inputs
+# ---------------------------------------------------------------------------
+
+
+def batch_struct(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Input batch stand-ins for train/prefill of one (arch, shape) cell."""
+    b, l = shape.global_batch, shape.seq_len
+    tok = lambda *s: jax.ShapeDtypeStruct(s, jnp.int32)
+    emb = lambda *s: jax.ShapeDtypeStruct(s, cfg.cdtype)
+    batch: Dict[str, Any] = {}
+    if cfg.frontend == "patch":
+        n_text = l - cfg.frontend_len
+        batch["tokens"] = tok(b, n_text)
+        batch["labels"] = tok(b, n_text)
+        batch["patches"] = emb(b, cfg.frontend_len, cfg.d_model)
+    elif cfg.frontend == "audio":
+        batch["tokens"] = tok(b, l)
+        batch["labels"] = tok(b, l)
+        batch["frames"] = emb(b, cfg.frontend_len, cfg.d_model)
+    else:
+        batch["tokens"] = tok(b, l)
+        batch["labels"] = tok(b, l)
+    return batch
+
+
+def params_struct(cfg: ArchConfig):
+    return jax.eval_shape(lambda k: lm.init_params(k, cfg), jax.random.PRNGKey(0))
+
+
+def opt_state_struct(cfg: ArchConfig, params,
+                     opt_cfg: adamw.AdamWConfig = adamw.AdamWConfig()):
+    return jax.eval_shape(lambda p: adamw.init(p, opt_cfg), params)
+
+
+def decode_state_struct(cfg: ArchConfig, shape: ShapeConfig):
+    b = shape.global_batch
+    max_len = shape.seq_len
+    if cfg.frontend == "patch":
+        max_len = shape.seq_len  # includes the prefix inside seq_len
+    return jax.eval_shape(
+        functools.partial(lm.init_decode_states, cfg, b, max_len)
+    )
+
+
+def decode_inputs_struct(cfg: ArchConfig, shape: ShapeConfig):
+    b = shape.global_batch
+    return (
+        jax.ShapeDtypeStruct((b, 1), jnp.int32),       # token
+        jax.ShapeDtypeStruct((), jnp.int32),           # pos
+    )

@@ -1,0 +1,172 @@
+"""End-to-end training driver.
+
+Composes every substrate layer: config -> model -> sharded step -> data
+pipeline -> checkpointing -> fault handling -> straggler monitor.  On this
+CPU container it trains reduced configs for real (examples/train_lm.py runs a
+~100M model for a few hundred steps); on a TPU fleet the same driver lowers
+the full configs against the production mesh.
+
+Usage:
+  python -m repro.launch.train --arch xlstm-350m --smoke --steps 50
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import time
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.configs import get_config, get_smoke_config
+from repro.data.pipeline import PipelineConfig, TokenPipeline
+from repro.models import lm
+from repro.models.config import ArchConfig
+from repro.models.shardctx import activation_sharding
+from repro.optim import adamw
+from repro.runtime.fault import FailureInjector, run_with_restarts
+from repro.runtime.straggler import StragglerMonitor
+
+from . import sharding as shd
+from . import steps
+from .mesh import dp_axes, make_mesh, tp_axis
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: adamw.OptState
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    arch: str = "xlstm-350m"
+    smoke: bool = False
+    steps: int = 100
+    batch: int = 8
+    seq_len: int = 256
+    lr: float = 3e-4
+    save_every: int = 50
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    mesh_shape: Optional[tuple] = None     # e.g. (2, 2); None = single device
+    fail_at: tuple = ()                    # failure-injection steps
+    log_every: int = 10
+
+
+def build(cfg_t: TrainConfig):
+    acfg = (get_smoke_config if cfg_t.smoke else get_config)(cfg_t.arch)
+    opt_cfg = adamw.AdamWConfig(lr=cfg_t.lr)
+    mesh = None
+    if cfg_t.mesh_shape:
+        names = ("data", "model")[: len(cfg_t.mesh_shape)]
+        mesh = make_mesh(tuple(cfg_t.mesh_shape), names)
+    step_fn = steps.make_train_step(acfg, opt_cfg)
+    if mesh is not None:
+        params_proto = steps.params_struct(acfg)
+        pshard = shd.param_shardings(params_proto, acfg, mesh)
+        opt_proto = steps.opt_state_struct(acfg, params_proto, opt_cfg)
+        oshard = shd.opt_state_shardings(opt_proto, pshard, mesh)
+        with activation_sharding(mesh, dp=dp_axes(mesh), tp=tp_axis(mesh)):
+            jit_step = jax.jit(
+                step_fn,
+                in_shardings=(pshard, oshard, None),
+                out_shardings=(pshard, oshard, None),
+                donate_argnums=(0, 1),
+            )
+    else:
+        jit_step = jax.jit(step_fn, donate_argnums=(0, 1))
+    return acfg, opt_cfg, jit_step, mesh
+
+
+def train(cfg_t: TrainConfig) -> Dict[str, Any]:
+    acfg, opt_cfg, jit_step, mesh = build(cfg_t)
+    pipe = TokenPipeline(
+        PipelineConfig(
+            vocab_size=acfg.vocab_size,
+            global_batch=cfg_t.batch,
+            seq_len=cfg_t.seq_len,
+        )
+    )
+    ckpt = Checkpointer(cfg_t.ckpt_dir, keep=2)
+    injector = FailureInjector(fail_at_steps=tuple(cfg_t.fail_at))
+    monitor = StragglerMonitor(1, cfg_t.batch)
+    losses: list = []
+    times: list = []
+
+    def make_state():
+        params = lm.init_params(jax.random.PRNGKey(0), acfg)
+        return TrainState(params, adamw.init(params, opt_cfg))
+
+    def extra_batch(b, tokens_np):
+        batch = {k: jnp.asarray(v) for k, v in tokens_np.items()}
+        if acfg.frontend == "patch":
+            batch["patches"] = jnp.zeros(
+                (b, acfg.frontend_len, acfg.d_model), acfg.cdtype
+            )
+        if acfg.frontend == "audio":
+            batch["frames"] = jnp.zeros(
+                (b, acfg.frontend_len, acfg.d_model), acfg.cdtype
+            )
+        return batch
+
+    def one_step(state: TrainState, step: int) -> TrainState:
+        t0 = time.time()
+        batch = extra_batch(cfg_t.batch, pipe.batch_at(step))
+        params, opt, metrics = jit_step(state.params, state.opt, batch)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        dt = time.time() - t0
+        times.append(dt)
+        monitor.observe([dt])
+        if step % cfg_t.log_every == 0:
+            print(f"[train] step={step:5d} loss={loss:.4f} "
+                  f"gnorm={float(metrics['grad_norm']):.3f} dt={dt*1e3:.0f}ms")
+        return TrainState(params, opt)
+
+    run = run_with_restarts(
+        total_steps=cfg_t.steps,
+        make_state=make_state,
+        train_step=one_step,
+        checkpointer=ckpt,
+        save_every=cfg_t.save_every,
+        injector=injector,
+    )
+    pipe.stop()
+    return {
+        "losses": losses,
+        "final_loss": losses[-1] if losses else None,
+        "restarts": run.restarts,
+        "steps": run.step,
+        "mean_step_s": float(np.mean(times[2:])) if len(times) > 2 else None,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="xlstm-350m")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--mesh", default=None, help="e.g. 2x2")
+    args = ap.parse_args()
+    mesh_shape = (
+        tuple(int(x) for x in args.mesh.split("x")) if args.mesh else None
+    )
+    out = train(TrainConfig(
+        arch=args.arch, smoke=args.smoke, steps=args.steps, batch=args.batch,
+        seq_len=args.seq_len, lr=args.lr, ckpt_dir=args.ckpt_dir,
+        mesh_shape=mesh_shape,
+    ))
+    print(f"[train] done: final_loss={out['final_loss']:.4f} "
+          f"restarts={out['restarts']} mean_step={out['mean_step_s']}")
+
+
+if __name__ == "__main__":
+    main()

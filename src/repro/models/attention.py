@@ -1,0 +1,139 @@
+"""GQA attention block (qk_norm / qkv_bias / rope / KV-cache / cross-attn)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+
+from . import shardctx
+
+from .config import ArchConfig
+from .layers import apply_rope, dense, dense_init, rmsnorm, rmsnorm_init
+
+
+def attn_init(key, cfg: ArchConfig, *, cross: bool = False):
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": dense_init(ks[0], d, hq * hd, cfg.pdtype, bias=cfg.qkv_bias),
+        "wk": dense_init(ks[1], d, hkv * hd, cfg.pdtype, bias=cfg.qkv_bias),
+        "wv": dense_init(ks[2], d, hkv * hd, cfg.pdtype, bias=cfg.qkv_bias),
+        "wo": dense_init(ks[3], hq * hd, d, cfg.pdtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(hd, cfg.pdtype)
+        p["k_norm"] = rmsnorm_init(hd, cfg.pdtype)
+    return p
+
+
+def init_kv_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.cache_dtype)
+    hkv, hd = cfg.n_kv_heads, cfg.hd
+    return {
+        "k": jnp.zeros((batch, hkv, max_len, hd), dtype),
+        "v": jnp.zeros((batch, hkv, max_len, hd), dtype),
+    }
+
+
+def _project_qkv(p, cfg: ArchConfig, x, positions, *, rope: bool = True):
+    bsz, l, _ = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = dense(p["wq"], x, "up").reshape(bsz, l, hq, hd).transpose(0, 2, 1, 3)
+    k = dense(p["wk"], x, "up").reshape(bsz, l, hkv, hd).transpose(0, 2, 1, 3)
+    v = dense(p["wv"], x, "up").reshape(bsz, l, hkv, hd).transpose(0, 2, 1, 3)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    q = shardctx.constrain_heads(q)
+    k = shardctx.constrain_heads(k)
+    v = shardctx.constrain_heads(v)
+    return q, k, v
+
+
+def attention_block(p, cfg: ArchConfig, x, positions, *, causal: bool = True):
+    """Full-sequence attention (train / prefill).  x: (B, L, D)."""
+    bsz, l, _ = x.shape
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    o = kops.attention(q, k, v, causal=causal, backend=cfg.attn_backend)
+    o = o.transpose(0, 2, 1, 3).reshape(bsz, l, cfg.n_heads * cfg.hd)
+    return dense(p["wo"], o.astype(x.dtype), "down")
+
+
+def attention_prefill(p, cfg: ArchConfig, x, positions, cache):
+    """Prefill: run full attention and fill the cache in one pass.
+
+    When the prompt fills the whole cache (the dry-run's prefill shapes), the
+    cache is replaced outright — a DUS would force an extra copy through the
+    sharded-cache layout."""
+    bsz, l, _ = x.shape
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    o = kops.attention(q, k, v, causal=True, backend=cfg.attn_backend)
+    o = o.transpose(0, 2, 1, 3).reshape(bsz, l, cfg.n_heads * cfg.hd)
+    if l == cache["k"].shape[2]:
+        cache = {"k": k.astype(cache["k"].dtype), "v": v.astype(cache["v"].dtype)}
+    else:
+        cache = {
+            "k": jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k.astype(cache["k"].dtype), 0, axis=2),
+            "v": jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v.astype(cache["v"].dtype), 0, axis=2),
+        }
+    return dense(p["wo"], o.astype(x.dtype), "down"), cache
+
+
+def attention_decode(p, cfg: ArchConfig, x, pos, cache):
+    """One-token decode: x (B, 1, D); pos scalar int32 (current position).
+
+    The cache sequence dim is sharded over the TP axis by the launcher's
+    sharding constraints.  Two sharding-critical choices:
+      * the cache write is a one-hot select, not dynamic_update_slice — DUS
+        at a traced position on a sharded dim triggers GSPMD's "involuntary
+        full rematerialization" (the whole cache is replicated);
+      * GQA uses grouped einsums instead of repeating kv heads 8x in memory.
+    The softmax reductions over the sharded axis are resolved by GSPMD.
+    """
+    bsz = x.shape[0]
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    positions = jnp.full((bsz, 1), pos, jnp.int32)
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    s_len = cache["k"].shape[2]
+    onehot = (jnp.arange(s_len) == pos)[None, None, :, None]
+    ck = jnp.where(onehot, k.astype(cache["k"].dtype), cache["k"])
+    cv = jnp.where(onehot, v.astype(cache["v"].dtype), cache["v"])
+    g = hq // hkv
+    qg = q.reshape(bsz, hkv, g, hd)                   # (B, Hkv, G, hd)
+    # FP8 caches: quantize the (single-token) q / probs operand to match —
+    # the dot accumulates in fp32 (standard fp8-KV serving arithmetic).
+    scores = jnp.einsum(
+        "bkgd,bksd->bkgs", qg.astype(ck.dtype), ck,
+        preferred_element_type=jnp.float32,
+    ) * (hd ** -0.5)
+    mask = (jnp.arange(s_len) <= pos)[None, None, None, :]
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum(
+        "bkgs,bksd->bkgd", probs.astype(cv.dtype), cv,
+        preferred_element_type=jnp.float32,
+    )
+    o = o.reshape(bsz, 1, hq * hd)
+    return dense(p["wo"], o.astype(x.dtype), "down"), {"k": ck, "v": cv}
+
+
+def cross_attention(p, cfg: ArchConfig, x, enc_out):
+    """Encoder-decoder cross attention (whisper): keys/values from encoder."""
+    bsz, l, _ = x.shape
+    le = enc_out.shape[1]
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = dense(p["wq"], x).reshape(bsz, l, hq, hd).transpose(0, 2, 1, 3)
+    k = dense(p["wk"], enc_out).reshape(bsz, le, hkv, hd).transpose(0, 2, 1, 3)
+    v = dense(p["wv"], enc_out).reshape(bsz, le, hkv, hd).transpose(0, 2, 1, 3)
+    o = kops.attention(q, k, v, causal=False, backend="xla")
+    o = o.transpose(0, 2, 1, 3).reshape(bsz, l, hq * hd)
+    return dense(p["wo"], o.astype(x.dtype), "down")

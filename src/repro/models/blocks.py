@@ -1,0 +1,151 @@
+"""Block assembly: pre-norm residual blocks of each kind + state plumbing."""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import (
+    attention_block,
+    attention_decode,
+    attention_prefill,
+    attn_init,
+    cross_attention,
+    init_kv_cache,
+)
+from .config import ArchConfig
+from .layers import rmsnorm, rmsnorm_init, swiglu, swiglu_init
+from .moe import moe_apply, moe_init
+from .ssm import (
+    mamba2_apply,
+    mamba2_decode,
+    mamba2_init,
+    mamba2_prefill,
+    mamba2_state_init,
+    mlstm_apply,
+    mlstm_decode,
+    mlstm_init,
+    mlstm_prefill,
+    mlstm_state_init,
+    slstm_decode,
+    slstm_init,
+    slstm_state_init,
+    slstm_apply,
+)
+
+
+def block_init(key, cfg: ArchConfig, kind: str, *, cross: bool = False):
+    ks = jax.random.split(key, 8)
+    d = cfg.d_model
+    if kind in ("attn", "shared_attn"):
+        p = {
+            "ln1": rmsnorm_init(d, cfg.pdtype),
+            "attn": attn_init(ks[0], cfg),
+            "ln2": rmsnorm_init(d, cfg.pdtype),
+            "mlp": swiglu_init(ks[1], d, cfg.d_ff, cfg.pdtype),
+        }
+        if cross:
+            p["lnx"] = rmsnorm_init(d, cfg.pdtype)
+            p["xattn"] = attn_init(ks[2], cfg)
+        return p
+    if kind == "moe":
+        p = {
+            "ln1": rmsnorm_init(d, cfg.pdtype),
+            "attn": attn_init(ks[0], cfg),
+            "ln2": rmsnorm_init(d, cfg.pdtype),
+            "moe": moe_init(ks[1], cfg),
+        }
+        if cfg.moe_dense_residual:
+            p["dense_mlp"] = swiglu_init(ks[2], d, cfg.d_ff, cfg.pdtype)
+        return p
+    if kind == "mamba2":
+        return {"ln1": rmsnorm_init(d, cfg.pdtype), "mixer": mamba2_init(ks[0], cfg)}
+    if kind == "mlstm":
+        return {"ln1": rmsnorm_init(d, cfg.pdtype), "mixer": mlstm_init(ks[0], cfg)}
+    if kind == "slstm":
+        return {"ln1": rmsnorm_init(d, cfg.pdtype), "mixer": slstm_init(ks[0], cfg)}
+    raise ValueError(f"unknown block kind {kind!r}")
+
+
+def block_state_init(cfg: ArchConfig, kind: str, batch: int, max_len: int):
+    """Decode-time state for one block instance."""
+    if kind in ("attn", "shared_attn", "moe"):
+        return init_kv_cache(cfg, batch, max_len)
+    if kind == "mamba2":
+        return mamba2_state_init(cfg, batch)
+    if kind == "mlstm":
+        return mlstm_state_init(cfg, batch)
+    if kind == "slstm":
+        return slstm_state_init(cfg, batch)
+    raise ValueError(kind)
+
+
+def block_apply(
+    p,
+    cfg: ArchConfig,
+    kind: str,
+    x,
+    *,
+    positions=None,
+    mode: str = "train",
+    state=None,
+    pos=None,
+    enc_out=None,
+    seq_axes=None,
+) -> Tuple[jax.Array, Any, jax.Array]:
+    """Apply one block. Returns (x, new_state, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind in ("attn", "shared_attn", "moe"):
+        h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+        if mode == "train":
+            a = attention_block(p["attn"], cfg, h, positions)
+            new_state = None
+        elif mode == "prefill":
+            a, new_state = attention_prefill(p["attn"], cfg, h, positions, state)
+        elif mode == "decode":
+            a, new_state = attention_decode(p["attn"], cfg, h, pos, state)
+        else:
+            raise ValueError(mode)
+        x = x + a
+        if "xattn" in p and enc_out is not None:
+            h = rmsnorm(p["lnx"], x, cfg.norm_eps)
+            x = x + cross_attention(p["xattn"], cfg, h, enc_out)
+        h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        if kind == "moe":
+            y, aux = moe_apply(p["moe"], cfg, h)
+            if cfg.moe_dense_residual:
+                y = y + swiglu(p["dense_mlp"], h)
+            x = x + y
+        else:
+            x = x + swiglu(p["mlp"], h)
+        return x, new_state, aux
+    if kind == "mamba2":
+        h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+        if mode == "train":
+            y, new_state = mamba2_apply(p["mixer"], cfg, h, seq_axes=seq_axes), None
+        elif mode == "prefill":
+            y, new_state = mamba2_prefill(p["mixer"], cfg, h, state)
+        else:
+            y, new_state = mamba2_decode(p["mixer"], cfg, h, state)
+        return x + y, new_state, aux
+    if kind == "mlstm":
+        h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+        if mode == "train":
+            y, new_state = mlstm_apply(p["mixer"], cfg, h, seq_axes=seq_axes), None
+        elif mode == "prefill":
+            y, new_state = mlstm_prefill(p["mixer"], cfg, h, state)
+        else:
+            y, new_state = mlstm_decode(p["mixer"], cfg, h, state)
+        return x + y, new_state, aux
+    if kind == "slstm":
+        h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+        if mode == "train":
+            y, new_state = slstm_apply(p["mixer"], cfg, h), None
+        elif mode == "prefill":
+            y, new_state = slstm_apply(p["mixer"], cfg, h, None, return_state=True)
+        else:
+            y, new_state = slstm_decode(p["mixer"], cfg, h, state)
+        return x + y, new_state, aux
+    raise ValueError(kind)

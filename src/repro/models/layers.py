@@ -1,0 +1,186 @@
+"""Primitive layers: functional init/apply pairs over plain dict pytrees."""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import shardctx
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, *, bias: bool = False, scale=None):
+    scale = (1.0 / math.sqrt(d_in)) if scale is None else scale
+    w = jax.random.normal(key, (d_in, d_out), jnp.float32) * scale
+    p = {"w": w.astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p, x, kind=None):
+    w = p["w"]
+    if kind is not None:
+        w = shardctx.constrain_weight(w, kind)
+    y = x @ w
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def rmsnorm_init(d: int, dtype):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p, x, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_init(d: int, dtype):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p, x, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = x32.mean(-1, keepdims=True)
+    var = ((x32 - mu) ** 2).mean(-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)).astype(
+        x.dtype
+    )
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    return {"table": (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)}
+
+
+def embed(p, ids):
+    return jnp.take(p["table"], ids, axis=0)
+
+
+def unembed(p, x, softcap: float = 0.0):
+    logits = (x @ p["table"].T).astype(jnp.float32)
+    if softcap:
+        logits = jnp.tanh(logits / softcap) * softcap
+    return logits
+
+
+def rope_freqs(hd: int, theta: float):
+    return theta ** (-jnp.arange(0, hd // 2, dtype=jnp.float32) / (hd // 2))
+
+
+def apply_rope(x, positions, theta: float = 1e4):
+    """x: (B, H, L, hd); positions: (B, L) or (L,)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                      # (hd/2,)
+    if positions.ndim == 1:
+        ang = positions[:, None].astype(jnp.float32) * freqs[None, :]
+        ang = ang[None, None]                          # (1,1,L,hd/2)
+    else:
+        ang = positions[:, None, :, None].astype(jnp.float32) * freqs
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu_init(key, d: int, f: int, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w1": dense_init(k1, d, f, dtype),     # gate
+        "w3": dense_init(k2, d, f, dtype),     # up
+        "w2": dense_init(k3, f, d, dtype),     # down
+    }
+
+
+def swiglu(p, x):
+    return dense(p["w2"],
+                 jax.nn.silu(dense(p["w1"], x, "up")) * dense(p["w3"], x, "up"),
+                 "down")
+
+
+def softmax_cross_entropy(logits, labels, ignore_id: int = -1):
+    """logits (..., V) fp32; labels (...) int; mean over non-ignored."""
+    mask = labels != ignore_id
+    labels = jnp.where(mask, labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1)
+
+
+def head_init(key, d: int, vocab: int, n_chunks: int, dtype):
+    """Unembedding stored chunk-major: (NC, D, V/NC).
+
+    The chunk dim lets the CE loss scan vocabulary chunks without ever
+    materializing (B, L, V) logits, while each chunk stays TP-sharded —
+    the layout is chosen so the scan slices are sharding-aligned.
+    """
+    assert vocab % n_chunks == 0
+    w = jax.random.normal(key, (n_chunks, d, vocab // n_chunks), jnp.float32)
+    return {"w": (w / jnp.sqrt(d)).astype(dtype)}
+
+
+def head_logits(p, x, softcap: float = 0.0):
+    """Materialized logits (tests / decode / small models)."""
+    nc = p["w"].shape[0]
+    logits = jnp.einsum("bld,cdv->blcv", x, p["w"])
+    logits = logits.reshape(*x.shape[:-1], -1).astype(jnp.float32)
+    if softcap:
+        logits = jnp.tanh(logits / softcap) * softcap
+    return logits
+
+
+def chunked_cross_entropy(p, x, labels, *, softcap: float = 0.0,
+                          ignore_id: int = -1, unroll: bool = False):
+    """CE over a chunk-major head without materializing full logits.
+
+    lax.scan over vocab chunks with an online logsumexp; backward re-runs the
+    per-chunk matmul (scan-remat), trading ~1 extra head matmul for O(V/NC)
+    live memory instead of O(V).
+    """
+    nc, d, vc = p["w"].shape
+    x32 = x
+    mask = labels != ignore_id
+    labels_s = jnp.where(mask, labels, 0)
+    chunk_id = labels_s // vc
+    chunk_pos = labels_s % vc
+
+    def body(carry, inp):
+        m, s, gold = carry
+        ci, w = inp
+        lg = (x32 @ w).astype(jnp.float32)                     # (B, L, vc)
+        lg = shardctx.constrain_vocab_chunk(lg)
+        if softcap:
+            lg = jnp.tanh(lg / softcap) * softcap
+        m_new = jnp.maximum(m, lg.max(-1))
+        s = s * jnp.exp(m - m_new) + jnp.exp(lg - m_new[..., None]).sum(-1)
+        is_here = chunk_id == ci
+        g = jnp.take_along_axis(lg, chunk_pos[..., None], axis=-1)[..., 0]
+        gold = gold + jnp.where(is_here, g, 0.0)
+        return (m_new, s, gold), None
+
+    b, l = labels.shape
+    init = (
+        jnp.full((b, l), -1e30, jnp.float32),
+        jnp.zeros((b, l), jnp.float32),
+        jnp.zeros((b, l), jnp.float32),
+    )
+    if unroll:
+        carry = init
+        body_r = jax.checkpoint(lambda c, i: body(c, i)[0])
+        for ci in range(nc):
+            carry = body_r(carry, (jnp.asarray(ci), p["w"][ci]))
+        m, s, gold = carry
+    else:
+        (m, s, gold), _ = jax.lax.scan(
+            body, init, (jnp.arange(nc), p["w"])
+        )
+    logz = m + jnp.log(s)
+    nll = (logz - gold) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1)

@@ -1,0 +1,266 @@
+"""The unified language model: scan-over-superblocks, train/prefill/decode.
+
+A model is ``n_super`` repetitions of ``cfg.block_pattern`` (a "superblock").
+Parameters of scanned positions are stacked with leading dim n_super and the
+forward pass is one ``lax.scan`` — the HLO stays small for 80-layer models
+(critical for 512-device compile times) and remat applies per superblock.
+``shared_attn`` blocks (zamba2) keep a single unscanned parameter set passed
+via closure, exactly matching the weight-shared architecture.
+
+Multimodal frontends are stubs per the assignment: ``batch["frames"]`` /
+``batch["patches"]`` carry precomputed embeddings at d_model width.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .blocks import block_apply, block_init, block_state_init
+from . import shardctx
+from .config import ArchConfig
+from .layers import (
+    chunked_cross_entropy,
+    dense,
+    dense_init,
+    embed,
+    embed_init,
+    head_init,
+    head_logits,
+    rmsnorm,
+    rmsnorm_init,
+    softmax_cross_entropy,
+)
+
+AUX_WEIGHT = 0.01
+
+
+def init_params(key, cfg: ArchConfig) -> Dict[str, Any]:
+    keys = jax.random.split(key, 16)
+    params: Dict[str, Any] = {
+        "embed": embed_init(keys[0], cfg.padded_vocab, cfg.d_model, cfg.pdtype),
+        "final_norm": rmsnorm_init(cfg.d_model, cfg.pdtype),
+        "head": head_init(
+            keys[1], cfg.d_model, cfg.padded_vocab, cfg.head_chunks, cfg.pdtype
+        ),
+    }
+    cross = cfg.encoder_layers > 0
+    blocks = {}
+    for j, kind in enumerate(cfg.block_pattern):
+        if kind == "shared_attn":
+            continue
+        bkeys = jax.random.split(jax.random.fold_in(keys[2], j), cfg.n_super)
+        blocks[f"b{j}"] = jax.vmap(
+            lambda k: block_init(k, cfg, kind, cross=cross)
+        )(bkeys)
+    params["blocks"] = blocks
+    if "shared_attn" in cfg.block_pattern:
+        params["shared"] = block_init(keys[3], cfg, "shared_attn")
+    if cfg.encoder_layers:
+        ekeys = jax.random.split(keys[4], cfg.encoder_layers)
+        params["encoder"] = {
+            "blocks": jax.vmap(lambda k: block_init(k, cfg, "attn"))(ekeys),
+            "norm": rmsnorm_init(cfg.d_model, cfg.pdtype),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+
+def _encode(params, cfg: ArchConfig, frames):
+    """Whisper-style encoder over precomputed frame embeddings (stub frontend).
+
+    Bidirectional attention (causal=False)."""
+    x = frames.astype(cfg.cdtype)
+    positions = jnp.arange(x.shape[1])
+
+    def body(carry, layer_params):
+        from .attention import attention_block
+        from .layers import swiglu
+
+        p = layer_params
+        h = rmsnorm(p["ln1"], carry, cfg.norm_eps)
+        a = attention_block(p["attn"], cfg, h, positions, causal=False)
+        x1 = carry + a
+        h = rmsnorm(p["ln2"], x1, cfg.norm_eps)
+        return x1 + swiglu(p["mlp"], h), None
+
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body, x, params["encoder"]["blocks"])
+    else:
+        for i in range(cfg.encoder_layers):
+            x, _ = body(x, jax.tree.map(lambda t, i=i: t[i],
+                                        params["encoder"]["blocks"]))
+    return rmsnorm(params["encoder"]["norm"], x, cfg.norm_eps)
+
+
+def _embed_inputs(params, cfg: ArchConfig, batch):
+    """Token embeddings, with multimodal prefixes prepended (VLM)."""
+    tokens = batch["tokens"]
+    x = embed(params["embed"], tokens).astype(cfg.cdtype)
+    x = shardctx.constrain_tokens_major(x)
+    n_prefix = 0
+    if cfg.frontend == "patch" and "patches" in batch:
+        x = jnp.concatenate([batch["patches"].astype(cfg.cdtype), x], axis=1)
+        n_prefix = batch["patches"].shape[1]
+    return x, n_prefix
+
+
+def _run_blocks(params, cfg: ArchConfig, x, *, positions, mode, states=None,
+                pos=None, enc_out=None, seq_axes=None):
+    """Scan over superblocks. states: dict b{j} -> stacked (n_super, ...)."""
+    pattern = cfg.block_pattern
+    has_states = states is not None
+
+    def superblock(carry, xs):
+        h, aux = carry
+        layer_params, layer_states = xs
+        new_states = {}
+        for j, kind in enumerate(pattern):
+            p = params["shared"] if kind == "shared_attn" else layer_params[f"b{j}"]
+            st = layer_states.get(f"b{j}") if has_states else None
+            h, nst, a = block_apply(
+                p, cfg, kind, h,
+                positions=positions, mode=mode, state=st, pos=pos,
+                enc_out=enc_out, seq_axes=seq_axes,
+            )
+            aux = aux + a
+            if has_states:
+                new_states[f"b{j}"] = nst
+        h = shardctx.constrain_tokens_major(h)
+        return (h, aux), (new_states if has_states else None)
+
+    body = superblock
+    if cfg.remat and mode == "train":
+        body = jax.checkpoint(superblock)
+
+    scan_params = dict(params["blocks"])
+    xs = (scan_params, states if has_states else {})
+    carry0 = (x, jnp.zeros((), jnp.float32))
+    if cfg.scan_layers:
+        (x, aux), new_states = jax.lax.scan(body, carry0, xs)
+        return x, aux, new_states
+    # Unrolled: (a) dry-run FLOP counting (XLA cost_analysis does not multiply
+    # while-loop bodies by trip count), (b) serving decode (per-layer state
+    # dicts alias in place).  States, when present, use the per-superblock
+    # dict layout (see init_decode_states).
+    carry = carry0
+    new_states = {} if has_states else None
+    for i in range(cfg.n_super):
+        params_i = jax.tree.map(lambda t, i=i: t[i], scan_params)
+        states_i = states.get(f"sb{i}", {}) if has_states else {}
+        carry, ys = body(carry, (params_i, states_i))
+        if has_states:
+            new_states[f"sb{i}"] = ys
+    x, aux = carry
+    return x, aux, new_states
+
+
+def forward_hidden(params, cfg: ArchConfig, batch, *, seq_axes=None):
+    """Shared trunk: returns (final-norm hidden on token positions, aux)."""
+    x, n_prefix = _embed_inputs(params, cfg, batch)
+    bsz, total_len, _ = x.shape
+    positions = jnp.arange(total_len)
+    enc_out = None
+    if cfg.encoder_layers and "frames" in batch:
+        enc_out = _encode(params, cfg, batch["frames"])
+    x, aux, _ = _run_blocks(
+        params, cfg, x, positions=positions, mode="train", enc_out=enc_out,
+        seq_axes=seq_axes,
+    )
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if n_prefix:
+        x = x[:, n_prefix:]
+    return x, aux
+
+
+def forward_train(params, cfg: ArchConfig, batch, *, seq_axes=None):
+    """Full teacher-forced forward: returns (logits[B, L_tokens, V], aux)."""
+    x, aux = forward_hidden(params, cfg, batch, seq_axes=seq_axes)
+    logits = head_logits(params["head"], x, cfg.logits_softcap)
+    return logits, aux
+
+
+def loss_fn(params, cfg: ArchConfig, batch, *, seq_axes=None):
+    """Training loss with vocab-chunked CE (never materializes full logits)."""
+    x, aux = forward_hidden(params, cfg, batch, seq_axes=seq_axes)
+    loss = chunked_cross_entropy(
+        params["head"], x, batch["labels"], softcap=cfg.logits_softcap,
+        unroll=not cfg.scan_layers,
+    )
+    return loss + AUX_WEIGHT * aux, {"ce": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode with per-block state
+# ---------------------------------------------------------------------------
+
+
+def init_decode_states(cfg: ArchConfig, batch: int, max_len: int):
+    """Per-superblock states + enc-dec extras.
+
+    scan_layers=True: stacked (n_super, ...) trees consumed by lax.scan.
+    scan_layers=False (unrolled decode — the serving layout): a dict of
+    per-superblock states, so XLA aliases each donated cache buffer in place
+    instead of copying through scan xs/ys."""
+    if cfg.scan_layers:
+        blocks = {}
+        for j, kind in enumerate(cfg.block_pattern):
+            proto = block_state_init(cfg, kind, batch, max_len)
+            blocks[f"b{j}"] = jax.tree.map(
+                lambda t: jnp.broadcast_to(t[None], (cfg.n_super,) + t.shape).copy(),
+                proto,
+            )
+    else:
+        blocks = {
+            f"sb{i}": {
+                f"b{j}": block_state_init(cfg, kind, batch, max_len)
+                for j, kind in enumerate(cfg.block_pattern)
+            }
+            for i in range(cfg.n_super)
+        }
+    states = {"blocks": blocks}
+    if cfg.encoder_layers:
+        states["enc_out"] = jnp.zeros(
+            (batch, cfg.frontend_len, cfg.d_model), cfg.cdtype
+        )
+    return states
+
+
+def prefill(params, cfg: ArchConfig, batch, states, *, seq_axes=None):
+    """Process the prompt, fill caches; returns (last_logits, states)."""
+    x, n_prefix = _embed_inputs(params, cfg, batch)
+    positions = jnp.arange(x.shape[1])
+    enc_out = None
+    if cfg.encoder_layers and "frames" in batch:
+        enc_out = _encode(params, cfg, batch["frames"])
+    x, aux, new_blocks = _run_blocks(
+        params, cfg, x, positions=positions, mode="prefill",
+        states=states["blocks"], enc_out=enc_out, seq_axes=seq_axes,
+    )
+    x = rmsnorm(params["final_norm"], x[:, -1:], cfg.norm_eps)
+    logits = head_logits(params["head"], x, cfg.logits_softcap)
+    new_states = {"blocks": new_blocks}
+    if cfg.encoder_layers:
+        new_states["enc_out"] = enc_out if enc_out is not None else states["enc_out"]
+    return logits, new_states
+
+
+def decode_step(params, cfg: ArchConfig, token, pos, states):
+    """One token for every sequence: token (B, 1) int32, pos scalar int32."""
+    x = embed(params["embed"], token).astype(cfg.cdtype)
+    enc_out = states.get("enc_out") if cfg.encoder_layers else None
+    x, aux, new_blocks = _run_blocks(
+        params, cfg, x, positions=None, mode="decode", states=states["blocks"],
+        pos=pos, enc_out=enc_out,
+    )
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = head_logits(params["head"], x, cfg.logits_softcap)
+    new_states = dict(states)
+    new_states["blocks"] = new_blocks
+    return logits, new_states

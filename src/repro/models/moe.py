@@ -1,0 +1,81 @@
+"""Mixture-of-Experts layer: top-k routing, capacity-bounded dispatch einsums.
+
+Expert weights carry a leading expert dim sharded over the TP axis (expert
+parallelism); tokens are grouped so the dispatch tensors stay bounded.  The
+router's load imbalance is the LLM-world analogue of the paper's imbalanced
+operator — the aux loss plus capacity factor play the role of the balancing
+step, and router stats are exported for the straggler monitor.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .layers import dense_init
+
+
+def moe_init(key, cfg: ArchConfig):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    scale = 1.0 / jnp.sqrt(d)
+    p = {
+        "router": dense_init(ks[0], d, e, jnp.float32),   # router in fp32
+        "w1": (jax.random.normal(ks[1], (e, d, f), jnp.float32) * scale).astype(cfg.pdtype),
+        "w3": (jax.random.normal(ks[2], (e, d, f), jnp.float32) * scale).astype(cfg.pdtype),
+        "w2": (jax.random.normal(ks[3], (e, f, d), jnp.float32) * (1.0 / jnp.sqrt(f))).astype(cfg.pdtype),
+    }
+    return p
+
+
+def moe_apply(p, cfg: ArchConfig, x) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, L, D) -> (y, aux_loss).
+
+    Grouped top-k dispatch (T5X/switch style): tokens are viewed as
+    (groups, group_size); per group each expert accepts at most
+    C = group_size * top_k * capacity_factor / E tokens.
+    """
+    bsz, l, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    t = bsz * l
+    g_size = min(cfg.moe_group_size, t)
+    assert t % g_size == 0, f"tokens {t} % group {g_size}"
+    g = t // g_size
+    xg = x.reshape(g, g_size, d)
+
+    logits = (xg.astype(jnp.float32) @ p["router"]["w"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)               # (g, s, e)
+    gate_vals, idx = jax.lax.top_k(probs, k)              # (g, s, k)
+    gate_vals = gate_vals / (gate_vals.sum(-1, keepdims=True) + 1e-9)
+
+    # Aux load-balancing loss (Switch): e * sum_e f_e * p_e.
+    me = probs.mean(axis=1)                               # (g, e)
+    one_hot_top1 = jax.nn.one_hot(idx[..., 0], e)
+    ce = one_hot_top1.mean(axis=1)                        # (g, e)
+    aux = (me * ce).sum(-1).mean() * e
+
+    capacity = int(g_size * k * cfg.capacity_factor / e) + 1
+    oh = jax.nn.one_hot(idx, e, dtype=jnp.int32)          # (g, s, k, e)
+    # Position of each (token, choice) in its expert's queue, counted over
+    # the flattened (s, k) order.
+    flat = oh.reshape(g, g_size * k, e)
+    pos_flat = jnp.cumsum(flat, axis=1) - 1               # (g, s*k, e)
+    pos = (pos_flat.reshape(g, g_size, k, e) * oh).sum(-1)  # (g, s, k)
+    keep = pos < capacity
+    gate_vals = gate_vals * keep
+
+    pos_oh = jax.nn.one_hot(pos, capacity, dtype=xg.dtype) * keep[..., None]
+    disp = jnp.einsum("gske,gskc->gsec", oh.astype(xg.dtype), pos_oh)
+    comb = jnp.einsum("gsk,gske,gskc->gsec", gate_vals.astype(xg.dtype),
+                      oh.astype(xg.dtype), pos_oh)
+
+    xe = jnp.einsum("gsec,gsd->egcd", disp, xg)           # (e, g, c, d)
+    h = jnp.einsum("egcd,edf->egcf", xe, p["w1"])
+    u = jnp.einsum("egcd,edf->egcf", xe, p["w3"])
+    h = jax.nn.silu(h) * u
+    ye = jnp.einsum("egcf,efd->egcd", h, p["w2"])         # (e, g, c, d)
+    y = jnp.einsum("gsec,egcd->gsd", comb, ye)
+    return y.reshape(bsz, l, d), aux

@@ -1,0 +1,130 @@
+"""Activation-sharding context: explicit GSPMD anchors inside the model.
+
+GSPMD propagates input/param shardings well through einsums but loses the
+batch sharding across remat + static-slice attention blocks (observed on the
+512-device dry-run: score slabs compiled with a replicated batch dim).  The
+launcher installs this context before tracing; the model calls
+``constrain_*`` at block boundaries.  When no context is installed (CPU unit
+tests) every call is a no-op.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_tls = threading.local()
+
+
+def _get():
+    return getattr(_tls, "ctx", None)
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh, *, dp, tp, seq_shard: bool = False,
+                        fsdp_gather: bool = False):
+    """dp: tuple of data axes; tp: model axis name or None.
+
+    fsdp_gather: constrain weights to their *gathered* (dp-free) layout at
+    the point of use — forces GSPMD to all-gather the (small) weight instead
+    of all-reducing the (huge) activation product when the contraction dim is
+    FSDP-sharded."""
+    prev = _get()
+    _tls.ctx = {"mesh": mesh, "dp": tuple(dp), "tp": tp,
+                "seq_shard": seq_shard, "fsdp_gather": fsdp_gather}
+    try:
+        yield
+    finally:
+        _tls.ctx = prev
+
+
+def _axis_size(mesh, names) -> int:
+    if names is None:
+        return 1
+    if isinstance(names, str):
+        names = (names,)
+    n = 1
+    for a in names:
+        n *= mesh.shape[a]
+    return n
+
+
+def _apply(x, spec):
+    ctx = _get()
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx["mesh"], spec)
+    )
+
+
+def constrain_tokens_major(x):
+    """(B, L, D) activations: batch over dp, sequence over tp.
+
+    The L/tp factor is Megatron-style sequence parallelism for the residual
+    stream: per-layer saved residuals shrink by the TP degree (without it an
+    80-layer 8k-wide model cannot fit its remat carries).  GSPMD inserts the
+    all-gather before attention/MLP and the reduce-scatter after — the same
+    schedule as hand-written SP."""
+    ctx = _get()
+    if ctx is None or x.ndim != 3:
+        return x
+    mesh, dp, tp = ctx["mesh"], ctx["dp"], ctx["tp"]
+    if ctx["seq_shard"]:
+        if x.shape[1] % _axis_size(mesh, dp) == 0:
+            return _apply(x, P(None, dp, None))
+        return x
+    b_ok = x.shape[0] % _axis_size(mesh, dp) == 0
+    l_ok = tp is not None and x.shape[1] % _axis_size(mesh, tp) == 0 and x.shape[1] > 1
+    if b_ok or l_ok:
+        return _apply(x, P(dp if b_ok else None, tp if l_ok else None, None))
+    return x
+
+
+def constrain_heads(x):
+    """(B, H, L, hd): batch over dp, heads over tp when divisible."""
+    ctx = _get()
+    if ctx is None or x.ndim != 4:
+        return x
+    mesh, dp, tp = ctx["mesh"], ctx["dp"], ctx["tp"]
+    b_ok = (not ctx["seq_shard"]) and x.shape[0] % _axis_size(mesh, dp) == 0
+    h_ok = tp is not None and x.shape[1] % _axis_size(mesh, tp) == 0
+    if ctx["seq_shard"]:
+        l_ok = x.shape[2] % _axis_size(mesh, dp) == 0
+        return _apply(x, P(None, tp if h_ok else None, dp if l_ok else None, None))
+    if b_ok or h_ok:
+        return _apply(x, P(dp if b_ok else None, tp if h_ok else None, None, None))
+    return x
+
+
+def constrain_weight(w, kind: str):
+    """Weight-gather FSDP: at use, a 2D weight is constrained to keep only
+    its TP sharding ('up': (in, out/tp); 'down': (in/tp, out)) so the FSDP
+    (dp) shards are all-gathered — cheap vs all-reducing activations."""
+    ctx = _get()
+    if ctx is None or not ctx.get("fsdp_gather") or w.ndim != 2:
+        return w
+    mesh, tp = ctx["mesh"], ctx["tp"]
+    if tp is None:
+        return _apply(w, P(None, None))
+    tp_dim = 1 if kind == "up" else 0
+    if w.shape[tp_dim] % _axis_size(mesh, tp) == 0:
+        spec = [None, None]
+        spec[tp_dim] = tp
+        return _apply(w, P(*spec))
+    return _apply(w, P(None, None))
+
+
+def constrain_vocab_chunk(x):
+    """(B, L, Vc) logit chunks: batch over dp, vocab over tp."""
+    ctx = _get()
+    if ctx is None or x.ndim != 3:
+        return x
+    mesh, dp, tp = ctx["mesh"], ctx["dp"], ctx["tp"]
+    b_ok = x.shape[0] % _axis_size(mesh, dp) == 0
+    v_ok = tp is not None and x.shape[2] % _axis_size(mesh, tp) == 0
+    if b_ok or v_ok:
+        return _apply(x, P(dp if b_ok else None, None, tp if v_ok else None))
+    return x

@@ -1,0 +1,325 @@
+"""SSM / linear-RNN blocks: Mamba2 (SSD), mLSTM, sLSTM.
+
+The sequence mixing of Mamba2 and mLSTM *is* a prefix scan with an expensive
+associative operator — the LM-side instantiation of the paper's problem.  Both
+run through ``kernels.ops.ssd_scan``: Pallas chunk-local kernels + an
+inter-chunk prefix circuit, i.e. reduce-then-scan (§4.1) inside the model.
+When the sequence is sharded (``cfg.seq_shard_prefill``), the inter-chunk scan
+continues across mesh axes with the hierarchical collective scan (§4.2).
+
+sLSTM is a *nonlinear* recurrence (h_{t-1} feeds the gates) — not scannable;
+it runs as ``lax.scan`` over time.  DESIGN.md §Arch-applicability notes this:
+the paper's technique cannot apply to non-associative recurrences.
+
+Simplifications vs the source papers (documented, validated by smoke tests):
+mLSTM uses sigmoid input gates instead of exp-with-max-stabilizer; Mamba2
+uses n_groups=1 (B/C shared across heads).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+
+from . import shardctx
+from .config import ArchConfig
+from .layers import dense, dense_init, rmsnorm, rmsnorm_init
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD)
+# ---------------------------------------------------------------------------
+
+
+def mamba2_init(key, cfg: ArchConfig):
+    d, di, ds, nh = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    ks = jax.random.split(key, 5)
+    conv_ch = di + 2 * ds
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * di + 2 * ds + nh, cfg.pdtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, conv_ch), jnp.float32) * 0.1).astype(cfg.pdtype),
+        "conv_b": jnp.zeros((conv_ch,), cfg.pdtype),
+        "a_log": jnp.zeros((nh,), jnp.float32),            # A = -exp(a_log) = -1
+        "dt_bias": jnp.full((nh,), -2.0, jnp.float32),     # softplus(-2) ~ .12
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "gate_norm": rmsnorm_init(di, cfg.pdtype),
+        "out_proj": dense_init(ks[4], di, d, cfg.pdtype),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv along L.  x: (B, L, C); w: (W, C).
+
+    Returns (y, new_state) where state is the last W-1 inputs."""
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(width))
+    new_state = xp[:, -(width - 1) :] if width > 1 else None
+    return jax.nn.silu(y + b), new_state
+
+
+def _mamba2_inner(p, cfg: ArchConfig, u, conv_state=None, ssm_state=None,
+                  seq_axes=None):
+    """Shared forward: u (B, L, D) -> (y, conv_state, ssm_state)."""
+    bsz, l, _ = u.shape
+    di, ds, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    hd = di // nh
+    proj = dense(p["in_proj"], u, "up")
+    x, z, bmat, cmat, dt = jnp.split(
+        proj, [di, 2 * di, 2 * di + ds, 2 * di + 2 * ds], axis=-1
+    )
+    xbc = jnp.concatenate([x, bmat, cmat], axis=-1)
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    x, bmat, cmat = jnp.split(xbc, [di, di + ds], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B, L, nh)
+    log_a = -jnp.exp(p["a_log"]) * dt                              # (B, L, nh) <= 0
+    v = x.reshape(bsz, l, nh, hd).transpose(0, 2, 1, 3)            # (B,nh,L,hd)
+    v_in = v * dt.transpose(0, 2, 1)[..., None].astype(v.dtype)
+    k = jnp.broadcast_to(bmat[:, None], (bsz, nh, l, ds))
+    q = jnp.broadcast_to(cmat[:, None], (bsz, nh, l, ds))
+    # Mamba2 heads (112 for zamba2) shard over TP — without the anchor these
+    # (B, nh, L, ds/hd) activations replicate over the model axis.
+    v_in = shardctx.constrain_heads(v_in)
+    k = shardctx.constrain_heads(k)
+    q = shardctx.constrain_heads(q)
+    la = log_a.transpose(0, 2, 1)                                  # (B, nh, L)
+
+    if l == 1 and ssm_state is not None:
+        y, new_ssm = kops.ssm_decode_step(
+            q[:, :, 0], k[:, :, 0], v_in[:, :, 0], la[:, :, 0], ssm_state
+        )
+        y = y[:, :, None]
+    else:
+        y = kops.ssd_scan(
+            q, k, v_in, la,
+            chunk=min(cfg.ssm_chunk, l),
+            backend=cfg.ssm_backend,
+            scan_algorithm=cfg.scan_algorithm,
+            axis_names=seq_axes,
+        )
+        new_ssm = None  # full-state return handled by prefill wrapper
+    y = y + p["d_skip"][None, :, None, None] * v.astype(jnp.float32)
+    y = y.transpose(0, 2, 1, 3).reshape(bsz, l, di).astype(u.dtype)
+    y = rmsnorm(p["gate_norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return dense(p["out_proj"], y, "down"), new_conv, new_ssm
+
+
+def mamba2_apply(p, cfg: ArchConfig, x, *, seq_axes=None):
+    y, _, _ = _mamba2_inner(p, cfg, x, seq_axes=seq_axes)
+    return y
+
+
+def mamba2_state_init(cfg: ArchConfig, batch: int):
+    di, ds, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    hd = di // nh
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, di + 2 * ds), cfg.cdtype),
+        "ssm": jnp.zeros((batch, nh, ds, hd), jnp.float32),
+    }
+
+
+def mamba2_decode(p, cfg: ArchConfig, x, state):
+    y, new_conv, new_ssm = _mamba2_inner(
+        p, cfg, x, conv_state=state["conv"], ssm_state=state["ssm"]
+    )
+    return y, {"conv": new_conv.astype(state["conv"].dtype), "ssm": new_ssm}
+
+
+def mamba2_prefill(p, cfg: ArchConfig, x, state):
+    """Prefill: full scan + reconstruct the final recurrent state."""
+    bsz, l, _ = x.shape
+    di, ds, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    hd = di // nh
+    # Recompute the pieces needed for the final state (cheap vs the scan).
+    proj = dense(p["in_proj"], x, "up")
+    xs, z, bmat, cmat, dt = jnp.split(
+        proj, [di, 2 * di, 2 * di + ds, 2 * di + 2 * ds], axis=-1
+    )
+    xbc = jnp.concatenate([xs, bmat, cmat], axis=-1)
+    new_conv = xbc[:, -(cfg.ssm_conv - 1):].astype(state["conv"].dtype)
+    xbc_c, _ = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xs, bmat, cmat = jnp.split(xbc_c, [di, di + ds], axis=-1)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    log_a = (-jnp.exp(p["a_log"]) * dtv).transpose(0, 2, 1)        # (B,nh,L)
+    v = xs.reshape(bsz, l, nh, hd).transpose(0, 2, 1, 3) * dtv.transpose(0, 2, 1)[..., None].astype(xs.dtype)
+    k = jnp.broadcast_to(bmat[:, None], (bsz, nh, l, ds))
+    # final state = sum_t decay(t..L) k_t^T v_t
+    ca = jnp.cumsum(log_a, axis=-1)
+    to_end = jnp.exp(ca[..., -1:] - ca)                            # (B,nh,L)
+    ssm = jnp.einsum("bhls,bhlv->bhsv", k.astype(jnp.float32) * to_end[..., None], v.astype(jnp.float32))
+    y, _, _ = _mamba2_inner(p, cfg, x)
+    return y, {"conv": new_conv, "ssm": ssm}
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM)
+# ---------------------------------------------------------------------------
+
+
+def mlstm_init(key, cfg: ArchConfig):
+    d, nh = cfg.d_model, cfg.n_heads
+    hd = cfg.ssm_head_dim
+    ks = jax.random.split(key, 7)
+    return {
+        "wq": dense_init(ks[0], d, nh * hd, cfg.pdtype),
+        "wk": dense_init(ks[1], d, nh * hd, cfg.pdtype),
+        "wv": dense_init(ks[2], d, nh * hd, cfg.pdtype),
+        "w_gates": dense_init(ks[3], d, 2 * nh, cfg.pdtype),  # i, f per head
+        "wz": dense_init(ks[4], d, nh * hd, cfg.pdtype),      # output gate
+        "out_norm": rmsnorm_init(nh * hd, cfg.pdtype),
+        "out_proj": dense_init(ks[5], nh * hd, d, cfg.pdtype),
+    }
+
+
+def _mlstm_qkv(p, cfg: ArchConfig, x):
+    bsz, l, _ = x.shape
+    nh, hd = cfg.n_heads, cfg.ssm_head_dim
+    shp = lambda t: t.reshape(bsz, l, nh, hd).transpose(0, 2, 1, 3)
+    q = shp(dense(p["wq"], x, "up")) * (hd ** -0.5)
+    k = shp(dense(p["wk"], x, "up")) * (hd ** -0.5)
+    v = shp(dense(p["wv"], x, "up"))
+    gates = dense(p["w_gates"], x).astype(jnp.float32)
+    ig, fg = jnp.split(gates, 2, axis=-1)                   # (B, L, nh)
+    i = jax.nn.sigmoid(ig).transpose(0, 2, 1)               # (B, nh, L)
+    log_f = jax.nn.log_sigmoid(fg).transpose(0, 2, 1)
+    return q, k, v, i, log_f
+
+
+def mlstm_apply(p, cfg: ArchConfig, x, *, seq_axes=None):
+    bsz, l, _ = x.shape
+    nh, hd = cfg.n_heads, cfg.ssm_head_dim
+    q, k, v, i, log_f = _mlstm_qkv(p, cfg, x)
+    k_in = k * i[..., None].astype(k.dtype)
+    num = kops.ssd_scan(
+        q, k_in, v, log_f,
+        chunk=min(cfg.ssm_chunk, l),
+        backend=cfg.ssm_backend,
+        scan_algorithm=cfg.scan_algorithm,
+        axis_names=seq_axes,
+    )
+    # Normalizer n_t = f n_{t-1} + i k_t — a (dk,)-vector scan in plain XLA.
+    def nop(a, b):
+        return (a[0] * b[0], a[1] * b[0][..., None] + b[1])
+    la_t = jnp.exp(log_f)                                    # (B, nh, L)
+    _, n = jax.lax.associative_scan(
+        nop, (la_t, k_in.astype(jnp.float32)), axis=2
+    )
+    denom = jnp.abs(jnp.einsum("bhld,bhld->bhl", q.astype(jnp.float32), n))
+    y = num / jnp.maximum(denom, 1.0)[..., None].astype(num.dtype)
+    y = y.transpose(0, 2, 1, 3).reshape(bsz, l, nh * hd)
+    y = rmsnorm(p["out_norm"], y, cfg.norm_eps)
+    y = y * jax.nn.silu(dense(p["wz"], x, "up"))
+    return dense(p["out_proj"], y, "down")
+
+
+def mlstm_state_init(cfg: ArchConfig, batch: int):
+    nh, hd = cfg.n_heads, cfg.ssm_head_dim
+    return {
+        "C": jnp.zeros((batch, nh, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, nh, hd), jnp.float32),
+    }
+
+
+def mlstm_decode(p, cfg: ArchConfig, x, state):
+    bsz = x.shape[0]
+    nh, hd = cfg.n_heads, cfg.ssm_head_dim
+    q, k, v, i, log_f = _mlstm_qkv(p, cfg, x)
+    q1, k1, v1 = q[:, :, 0], k[:, :, 0], v[:, :, 0]
+    f = jnp.exp(log_f[..., 0])[..., None, None]
+    k_in = (k1 * i[..., 0][..., None].astype(k1.dtype)).astype(jnp.float32)
+    C = f * state["C"] + jnp.einsum("bhd,bhv->bhdv", k_in, v1.astype(jnp.float32))
+    n = f[..., 0] * state["n"] + k_in
+    num = jnp.einsum("bhd,bhdv->bhv", q1.astype(jnp.float32), C)
+    denom = jnp.abs(jnp.einsum("bhd,bhd->bh", q1.astype(jnp.float32), n))
+    y = (num / jnp.maximum(denom, 1.0)[..., None]).astype(x.dtype)
+    y = y.reshape(bsz, 1, nh * hd)
+    y = rmsnorm(p["out_norm"], y, cfg.norm_eps)
+    y = y * jax.nn.silu(dense(p["wz"], x, "up"))
+    return dense(p["out_proj"], y, "down"), {"C": C, "n": n}
+
+
+def mlstm_prefill(p, cfg: ArchConfig, x, state):
+    bsz, l, _ = x.shape
+    q, k, v, i, log_f = _mlstm_qkv(p, cfg, x)
+    k_in = (k * i[..., None].astype(k.dtype)).astype(jnp.float32)
+    ca = jnp.cumsum(log_f, axis=-1)
+    to_end = jnp.exp(ca[..., -1:] - ca)
+    C = jnp.einsum("bhld,bhlv->bhdv", k_in * to_end[..., None], v.astype(jnp.float32))
+    n = jnp.einsum("bhld,bhl->bhd", k_in, to_end)
+    y = mlstm_apply(p, cfg, x)
+    return y, {"C": C, "n": n}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM: nonlinear recurrence — lax.scan over time (not scannable; see DESIGN)
+# ---------------------------------------------------------------------------
+
+
+def slstm_init(key, cfg: ArchConfig):
+    d, nh = cfg.d_model, cfg.n_heads
+    hd = d // nh
+    ks = jax.random.split(key, 4)
+    return {
+        "w_in": dense_init(ks[0], d, 4 * d, cfg.pdtype),     # z, i, f, o
+        "r": (jax.random.normal(ks[1], (nh, hd, 4 * hd), jnp.float32)
+              * (hd ** -0.5)).astype(cfg.pdtype),            # block-diag recurrent
+        "out_norm": rmsnorm_init(d, cfg.pdtype),
+        "out_proj": dense_init(ks[3], d, d, cfg.pdtype),
+    }
+
+
+def _slstm_cell(p, cfg: ArchConfig, wx_t, state):
+    """One step: wx_t (B, 4D) precomputed input part; state dict of (B,nh,hd)."""
+    nh = cfg.n_heads
+    hd = cfg.d_model // nh
+    h, c, n = state["h"], state["c"], state["n"]
+    rec = jnp.einsum("bhd,hdk->bhk", h, p["r"].astype(jnp.float32))  # (B,nh,4hd)
+    pre = wx_t.reshape(-1, nh, 4 * hd).astype(jnp.float32) + rec
+    z, i, f, o = jnp.split(pre, 4, axis=-1)
+    z = jnp.tanh(z)
+    i = jnp.exp(jnp.minimum(i, 10.0) - 10.0)  # bounded exp input gate
+    f = jax.nn.sigmoid(f)
+    o = jax.nn.sigmoid(o)
+    c = f * c + i * z
+    n = f * n + i
+    h = o * c / jnp.maximum(n, 1e-3)
+    return {"h": h, "c": c, "n": n}
+
+
+def slstm_state_init(cfg: ArchConfig, batch: int):
+    nh = cfg.n_heads
+    hd = cfg.d_model // nh
+    zero = lambda: jnp.zeros((batch, nh, hd), jnp.float32)
+    return {"h": zero(), "c": zero(), "n": zero()}
+
+
+def slstm_apply(p, cfg: ArchConfig, x, state=None, return_state: bool = False):
+    bsz, l, d = x.shape
+    wx = dense(p["w_in"], x, "up")                                # (B, L, 4D)
+    if state is None:
+        state = slstm_state_init(cfg, bsz)
+
+    def step(st, wx_t):
+        st = _slstm_cell(p, cfg, wx_t, st)
+        return st, st["h"]
+
+    state, hs = jax.lax.scan(step, state, wx.transpose(1, 0, 2))
+    y = hs.transpose(1, 0, 2, 3).reshape(bsz, l, d).astype(x.dtype)
+    y = dense(p["out_proj"], rmsnorm(p["out_norm"], y, cfg.norm_eps), "down")
+    if return_state:
+        return y, state
+    return y
+
+
+def slstm_decode(p, cfg: ArchConfig, x, state):
+    y, state = slstm_apply(p, cfg, x, state, return_state=True)
+    return y, state

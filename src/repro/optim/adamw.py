@@ -1,0 +1,104 @@
+"""AdamW with decoupled weight decay, fp32 state, global-norm clipping.
+
+Functional: state is a plain pytree shaped like the params (sharded with the
+same PartitionSpecs by the launcher, so optimizer memory scales with FSDP).
+Params may be bf16; the update is computed in fp32 against an fp32 master
+copy kept inside the state (mixed-precision training discipline).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    keep_master: bool = True   # fp32 master copy when params are low-precision
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+    master: Any  # fp32 params, or () when keep_master=False
+
+
+def init(params, cfg: AdamWConfig = AdamWConfig()) -> OptState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    # copy=True: fp32 params must not alias the master (both get donated).
+    master = (
+        jax.tree.map(lambda p: jnp.array(p, dtype=jnp.float32, copy=True), params)
+        if cfg.keep_master
+        else ()
+    )
+    return OptState(jnp.zeros((), jnp.int32), zeros,
+                    jax.tree.map(jnp.copy, zeros), master)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def update(
+    grads, state: OptState, params, cfg: AdamWConfig = AdamWConfig(),
+    lr_scale: jax.Array | float = 1.0,
+) -> Tuple[Any, OptState, Dict[str, jax.Array]]:
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+    lr = cfg.lr * lr_scale
+
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    ref = state.master if cfg.keep_master else params
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mhat = m / b1c
+        vhat = v / b2c
+        p32 = p.astype(jnp.float32)
+        p32 = p32 - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p32)
+        return m, v, p32
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = jax.tree.leaves(state.m)
+    flat_v = jax.tree.leaves(state.v)
+    flat_p = jax.tree.leaves(ref)
+    new_m, new_v, new_p32 = [], [], []
+    for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p):
+        m2, v2, p2 = upd(g, m, v, p)
+        new_m.append(m2)
+        new_v.append(v2)
+        new_p32.append(p2)
+    m = jax.tree.unflatten(treedef, new_m)
+    v = jax.tree.unflatten(treedef, new_v)
+    p32 = jax.tree.unflatten(treedef, new_p32)
+    dtypes = jax.tree.map(lambda p: p.dtype, params)
+    new_params = jax.tree.map(lambda x, dt: x.astype(dt), p32, dtypes)
+    new_master = p32 if cfg.keep_master else ()
+    metrics = {"grad_norm": gnorm, "lr": jnp.asarray(lr, jnp.float32)}
+    return new_params, OptState(step, m, v, new_master), metrics
+
+
+def cosine_schedule(step, *, warmup: int, total: int, floor: float = 0.1):
+    """Warmup-then-cosine multiplier in [floor, 1]."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+    t = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return warm * cos

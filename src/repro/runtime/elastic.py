@@ -1,0 +1,74 @@
+"""Elastic rescaling: rebuild mesh + reshard state when the fleet changes.
+
+Checkpoints are topology-free (full arrays, host-local), so a rescale is:
+(1) build a mesh over the surviving/added devices, (2) recompute sharding
+specs for the new mesh, (3) restore the latest checkpoint with device_put
+against the new shardings, (4) re-slice the data stream across the new host
+count.  The pieces all exist — this module composes them and validates the
+resulting configuration.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    old_devices: int
+    new_devices: int
+    mesh_shape: Tuple[int, ...]
+    axis_names: Tuple[str, ...]
+    data_parallel: int
+    model_parallel: int
+
+
+def plan_rescale(
+    n_devices: int,
+    *,
+    model_parallel: int,
+    min_data_parallel: int = 1,
+    pods: int = 1,
+) -> ElasticPlan:
+    """Choose a mesh for ``n_devices``: keep TP fixed, flex the DP axis.
+
+    TP size is architectural (weight shards); DP absorbs fleet changes —
+    the standard elastic policy.  Raises when the fleet can't support it.
+    """
+    if n_devices % (model_parallel * pods):
+        raise ValueError(
+            f"{n_devices} devices not divisible by TP={model_parallel} x pods={pods}"
+        )
+    dp = n_devices // (model_parallel * pods)
+    if dp < min_data_parallel:
+        raise ValueError(f"data parallel {dp} < minimum {min_data_parallel}")
+    if pods > 1:
+        return ElasticPlan(
+            -1, n_devices, (pods, dp, model_parallel), ("pod", "data", "model"),
+            dp * pods, model_parallel,
+        )
+    return ElasticPlan(
+        -1, n_devices, (dp, model_parallel), ("data", "model"), dp, model_parallel
+    )
+
+
+def build_mesh(plan: ElasticPlan, devices: Optional[Sequence] = None) -> Mesh:
+    devices = jax.devices() if devices is None else list(devices)
+    n = int(np.prod(plan.mesh_shape))
+    if len(devices) < n:
+        raise ValueError(f"need {n} devices, have {len(devices)}")
+    arr = np.array(devices[:n]).reshape(plan.mesh_shape)
+    return Mesh(arr, plan.axis_names)
+
+
+def rescale_batch_boundaries(global_batch: int, new_hosts: int):
+    """Fresh fair boundaries after a host-count change."""
+    return [
+        (i * global_batch // new_hosts, (i + 1) * global_batch // new_hosts - 1)
+        for i in range(new_hosts)
+    ]

@@ -1,0 +1,33 @@
+# NOTE: no XLA_FLAGS here on purpose — unit tests and benches run on the
+# single real CPU device; only launch/dryrun.py (its own process) forces 512
+# placeholder devices.  Multi-device tests spawn subprocesses (see
+# tests/test_distributed_scan.py) with the flag set in the child env.
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+def run_in_subprocess(code: str, *, devices: int = 8, timeout: int = 600):
+    """Run a python snippet with N virtual host devices; returns stdout."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True, text=True, timeout=timeout, env=env,
+    )
+    if out.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed:\nSTDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+        )
+    return out.stdout
+
+
+@pytest.fixture(scope="session")
+def subproc():
+    return run_in_subprocess

@@ -1,0 +1,148 @@
+"""Image registration: deformations, function A/B, series scan (paper §2.3/§3)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.deformation import (
+    compose,
+    compose_batched,
+    identity_deformation,
+    inverse,
+    make_deformation,
+    ncc,
+    warp,
+)
+from repro.core.registration import (
+    RegistrationConfig,
+    SeriesRegistrar,
+    register_pair,
+)
+from repro.core.scan import prefix_scan
+from repro.core.work_stealing import work_stealing_scan
+from repro.data.images import lattice_image, make_series
+
+CFG = RegistrationConfig()
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    a1=st.floats(-0.3, 0.3), a2=st.floats(-0.3, 0.3), a3=st.floats(-0.3, 0.3),
+    t1=st.floats(-5, 5), t2=st.floats(-5, 5), t3=st.floats(-5, 5),
+)
+def test_compose_associative(a1, a2, a3, t1, t2, t3):
+    """The scan operator must be associative (paper §2.3.3)."""
+    da = make_deformation(a1, [t1, t2])
+    db = make_deformation(a2, [t2, t3])
+    dc = make_deformation(a3, [t3, t1])
+    lhs = compose(compose(da, db), dc)
+    rhs = compose(da, compose(db, dc))
+    np.testing.assert_allclose(lhs["angle"], rhs["angle"], rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(lhs["shift"], rhs["shift"], rtol=1e-4, atol=1e-5)
+
+
+def test_compose_noncommutative():
+    da = make_deformation(0.5, [3.0, 0.0])
+    db = make_deformation(-0.2, [0.0, 2.0])
+    ab = compose(da, db)
+    ba = compose(db, da)
+    assert not np.allclose(np.asarray(ab["shift"]), np.asarray(ba["shift"]))
+
+
+def test_inverse():
+    d = make_deformation(0.3, [2.0, -1.5])
+    i = compose(d, inverse(d))
+    np.testing.assert_allclose(i["angle"], 0.0, atol=1e-6)
+    np.testing.assert_allclose(i["shift"], 0.0, atol=1e-5)
+
+
+def test_compose_batched_matches_compose():
+    key = jax.random.PRNGKey(0)
+    a = {"angle": jax.random.normal(key, (5,)) * 0.1,
+         "shift": jax.random.normal(key, (5, 2))}
+    b = {"angle": jax.random.normal(key, (5,)) * 0.1 + 0.05,
+         "shift": jax.random.normal(key, (5, 2)) - 0.2}
+    batched = compose_batched(a, b)
+    for i in range(5):
+        single = compose(jax.tree.map(lambda t: t[i], a),
+                         jax.tree.map(lambda t: t[i], b))
+        np.testing.assert_allclose(batched["angle"][i], single["angle"], rtol=1e-5)
+        np.testing.assert_allclose(batched["shift"][i], single["shift"], rtol=1e-4,
+                                   atol=1e-6)
+
+
+def test_warp_translation():
+    img = jnp.zeros((32, 32)).at[16, 16].set(1.0)
+    w = warp(img, make_deformation(0.0, [3.0, -2.0]))
+    peak = np.unravel_index(np.argmax(np.asarray(w)), (32, 32))
+    assert peak == (13, 18)  # warp(x) = img(x + shift)
+
+
+def test_ncc_properties():
+    key = jax.random.PRNGKey(3)
+    img = lattice_image(64, key=key)
+    assert float(ncc(img, img)) > 0.999
+    assert float(ncc(img, -img)) < -0.999
+    noise = jax.random.normal(key, img.shape)
+    assert abs(float(ncc(img, noise))) < 0.2
+
+
+def test_register_pair_recovers_shift():
+    frames, true = make_series(jax.random.PRNGKey(0), 4, size=96, noise=0.15)
+    for i in range(3):
+        res = register_pair(frames[i], frames[i + 1], None, CFG)
+        rel = np.asarray(true["shift"][i + 1] - true["shift"][i])
+        err = np.abs(np.asarray(res.deformation["shift"]) - rel).max()
+        assert err < 0.25, (i, err)
+        assert int(res.iterations) > 5  # actually iterated
+
+
+def test_iteration_count_data_dependent():
+    """The operator cost must vary with data (the paper's imbalance source)."""
+    frames, _ = make_series(jax.random.PRNGKey(5), 10, size=96, noise=0.2)
+    iters = [
+        int(register_pair(frames[i], frames[i + 1], None, CFG).iterations)
+        for i in range(9)
+    ]
+    assert len(set(iters)) > 3, iters
+
+
+def test_series_scan_matches_sequential():
+    """Prefix-scan registration == sequential registration (§2.3.3: both
+    converge to equivalent minima; we check deformation agreement)."""
+    frames, true = make_series(jax.random.PRNGKey(7), 10, size=96, noise=0.12)
+    reg = SeriesRegistrar(frames)
+    elems = reg.preprocess_vmapped()
+    seq = reg.sequential(list(elems))
+
+    reg2 = SeriesRegistrar(frames)
+    out, stats = work_stealing_scan(reg2.op, list(elems), 3, stealing=True)
+    for a, b in zip(seq, out):
+        assert a.i == b.i and a.k == b.k
+        np.testing.assert_allclose(
+            np.asarray(a.deformation["shift"]),
+            np.asarray(b.deformation["shift"]), atol=0.05,
+        )
+    # cumulative drift recovered
+    est = np.stack([np.asarray(e.deformation["shift"]) for e in out])
+    tru = np.asarray(true["shift"][1:])
+    assert np.abs(est - tru).max() < 0.35
+
+
+def test_pure_compose_scan_vectorized():
+    """refine=False operator is exactly associative: every circuit agrees."""
+    key = jax.random.PRNGKey(2)
+    n = 16
+    elems = {
+        "angle": jax.random.normal(key, (n,)) * 0.05,
+        "shift": jax.random.normal(key, (n, 2)) * 2.0,
+    }
+    ref = prefix_scan(compose_batched, elems, algorithm="sequential")
+    for alg in ["dissemination", "ladner_fischer", "blelloch", "brent_kung"]:
+        y = prefix_scan(compose_batched, elems, algorithm=alg)
+        np.testing.assert_allclose(np.asarray(y["angle"]),
+                                   np.asarray(ref["angle"]), rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(y["shift"]),
+                                   np.asarray(ref["shift"]), rtol=1e-4, atol=1e-5)

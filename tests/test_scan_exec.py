@@ -1,0 +1,112 @@
+"""Vectorized JAX executor + blocked (local-global-local) scans vs oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.scan import blocked_scan, exclusive_scan, prefix_scan
+
+ALGS = ["sequential", "dissemination", "blelloch", "ladner_fischer",
+        "brent_kung", "sklansky"]
+
+
+def _matmul(a, b):
+    return jnp.einsum("...ij,...jk->...ik", a, b)
+
+
+def _affine(a, b):
+    return (a[0] * b[0], a[1] * b[0] + b[1])
+
+
+@pytest.mark.parametrize("alg", ALGS)
+@pytest.mark.parametrize("n", [1, 2, 3, 7, 8, 16, 37, 64, 100])
+def test_scan_add(alg, n):
+    x = jnp.arange(1.0, n + 1)
+    y = prefix_scan(lambda a, b: a + b, x, algorithm=alg)
+    np.testing.assert_allclose(np.asarray(y), np.cumsum(np.arange(1, n + 1)),
+                               rtol=1e-6)
+
+
+@pytest.mark.parametrize("alg", ALGS[1:])
+def test_scan_matmul_noncommutative(alg):
+    key = jax.random.PRNGKey(0)
+    n = 33
+    m = jax.random.normal(key, (n, 2, 2)) * 0.3 + jnp.eye(2)
+    ref = [m[0]]
+    for i in range(1, n):
+        ref.append(ref[-1] @ m[i])
+    y = prefix_scan(_matmul, m, algorithm=alg)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(jnp.stack(ref)),
+                               rtol=1e-3, atol=1e-5)
+
+
+@pytest.mark.parametrize("alg", ["ladner_fischer", "blelloch"])
+def test_scan_pytree_elements(alg):
+    """Elements may be arbitrary pytrees (the affine/SSM-state operator)."""
+    n = 24
+    key = jax.random.PRNGKey(1)
+    m = jax.random.uniform(key, (n,), minval=0.5, maxval=1.0)
+    c = jax.random.normal(key, (n,))
+    ym, yc = prefix_scan(_affine, (m, c), algorithm=alg)
+    rm, rc = [m[0]], [c[0]]
+    for i in range(1, n):
+        rm.append(rm[-1] * m[i])
+        rc.append(rc[-1] * m[i] + c[i])
+    np.testing.assert_allclose(np.asarray(ym), np.asarray(jnp.stack(rm)), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(yc), np.asarray(jnp.stack(rc)), rtol=1e-4,
+                               atol=1e-6)
+
+
+def test_exclusive_scan():
+    x = jnp.arange(1.0, 9.0)
+    y = exclusive_scan(lambda a, b: a + b, x)
+    np.testing.assert_allclose(np.asarray(y)[1:], np.cumsum(np.arange(1, 8)))
+
+
+@pytest.mark.parametrize("strategy", ["scan_then_map", "reduce_then_scan"])
+@pytest.mark.parametrize("alg", ["dissemination", "ladner_fischer", "blelloch"])
+def test_blocked_scan(strategy, alg):
+    x = jnp.arange(1.0, 97.0)
+    y = blocked_scan(lambda a, b: a + b, x, num_blocks=8, strategy=strategy,
+                     algorithm=alg)
+    np.testing.assert_allclose(np.asarray(y), np.cumsum(np.arange(1, 97)),
+                               rtol=1e-6)
+
+
+def test_blocked_scan_noncommutative():
+    n, p = 64, 8
+    key = jax.random.PRNGKey(2)
+    m = jax.random.normal(key, (n, 2, 2)) * 0.2 + jnp.eye(2)
+    ref = [m[0]]
+    for i in range(1, n):
+        ref.append(ref[-1] @ m[i])
+    for strategy in ["scan_then_map", "reduce_then_scan"]:
+        y = blocked_scan(_matmul, m, num_blocks=p, strategy=strategy)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(jnp.stack(ref)),
+                                   rtol=1e-3, atol=1e-5)
+
+
+def test_scan_jittable():
+    f = jax.jit(lambda x: prefix_scan(lambda a, b: a + b, x,
+                                      algorithm="ladner_fischer"))
+    x = jnp.arange(1.0, 65.0)
+    np.testing.assert_allclose(np.asarray(f(x)), np.cumsum(np.arange(1, 65)),
+                               rtol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 50),
+    alg=st.sampled_from(ALGS),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_scan_matches_oracle(n, alg, seed):
+    """Property: any algorithm == sequential oracle for max (associative,
+    non-invertible, idempotent — a nasty operator class)."""
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (n,))
+    y = prefix_scan(jnp.maximum, x, algorithm=alg)
+    ref = np.maximum.accumulate(np.asarray(x))
+    np.testing.assert_allclose(np.asarray(y), ref, rtol=1e-6)

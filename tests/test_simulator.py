@@ -1,0 +1,92 @@
+"""Discrete-event simulator: paper-shaped claims at scale (Tables 3-5, Fig 8)."""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.simulator import (
+    NetworkModel,
+    constant_costs,
+    exponential_costs,
+    registration_like_costs,
+    simulate_distributed_scan,
+    theoretical_bound_full,
+    theoretical_bound_scan,
+)
+
+
+def test_cost_models_deterministic():
+    a = exponential_costs(1000, mean=10.0)
+    b = exponential_costs(1000, mean=10.0)
+    np.testing.assert_array_equal(a, b)  # MT19937(1410), like the paper
+    assert abs(a.mean() - 10.0) < 1.0
+    r = registration_like_costs(4096)
+    assert 5.0 < np.median(r) < 12.0 and r.max() > 15.0
+
+
+def test_serial_equals_sum():
+    costs = constant_costs(64, 2.0)
+    r = simulate_distributed_scan(costs, ranks=1, threads=1)
+    # phase1 = N ops, phase3 = N ops
+    assert r.makespan >= costs.sum()
+
+
+def test_balanced_speedup_close_to_bound():
+    """Constant-cost operator: simulated speedup approaches Eq. (5)."""
+    n, p = 4096, 64
+    costs = constant_costs(n, 1.0)
+    serial = (n - 1) * 1.0
+    r = simulate_distributed_scan(costs, ranks=p, threads=1,
+                                  algorithm="ladner_fischer")
+    speedup = serial / r.makespan
+    bound = theoretical_bound_scan(n, p)
+    assert speedup <= bound * 1.02
+    assert speedup >= bound * 0.5
+
+
+def test_stealing_beats_static_imbalanced():
+    """Fig 8c: work stealing improves imbalanced scans; more cores => more."""
+    n = 4096
+    costs = exponential_costs(n, mean=10.0)
+    for ranks, threads in [(16, 12), (42, 12)]:
+        n_use = n - n % ranks
+        c = costs[:n_use]
+        stat = simulate_distributed_scan(c, ranks=ranks, threads=threads,
+                                         algorithm="dissemination", stealing=False)
+        steal = simulate_distributed_scan(c, ranks=ranks, threads=threads,
+                                          algorithm="dissemination", stealing=True)
+        assert steal.makespan < stat.makespan, (ranks, threads)
+
+
+def test_stealing_never_changes_work_much():
+    costs = exponential_costs(1024, mean=1.0)
+    a = simulate_distributed_scan(costs, ranks=8, threads=4, stealing=False)
+    b = simulate_distributed_scan(costs, ranks=8, threads=4, stealing=True)
+    # same phase structure => identical operator-application counts
+    assert a.work == b.work
+
+
+def test_energy_decreases_with_stealing():
+    costs = exponential_costs(4096, mean=10.0)
+    a = simulate_distributed_scan(costs, ranks=32, threads=12, stealing=False)
+    b = simulate_distributed_scan(costs, ranks=32, threads=12, stealing=True)
+    assert b.energy < a.energy
+
+
+def test_hierarchical_reduces_global_ranks():
+    """§4.2: P ranks -> P' x T with the same total worker count still scans
+    correctly and reduces time on latency-heavy networks."""
+    costs = constant_costs(4096, 0.05)
+    slow_net = NetworkModel(latency=5e-3)
+    flat = simulate_distributed_scan(costs, ranks=128, threads=1, net=slow_net)
+    hier = simulate_distributed_scan(costs, ranks=16, threads=8, net=slow_net)
+    assert hier.makespan < flat.makespan
+
+
+def test_bounds_monotone():
+    for p in [64, 128, 256, 512, 1024]:
+        assert theoretical_bound_scan(4096, p) < theoretical_bound_scan(4096, 2 * p)
+        assert theoretical_bound_full(4096, p) < theoretical_bound_full(4096, 2 * p)
+    # The paper's setup: speedup bound at 1024 cores is in the low hundreds.
+    assert 100 < theoretical_bound_scan(4096, 1024) < 500

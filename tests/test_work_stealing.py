@@ -1,0 +1,113 @@
+"""Algorithm 1 (work stealing) invariants, correctness and balancing."""
+
+import time
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.work_stealing import (
+    rebalance_boundaries,
+    static_reduce,
+    stealing_reduce,
+    work_stealing_scan,
+)
+
+
+def _affine_op(a, b):
+    """Non-commutative modular affine compose — cheap and order-sensitive."""
+    return (a[0] * b[0] % 1000003, (a[1] * b[0] + b[1]) % 1000003)
+
+
+def _seq_scan(xs):
+    out = [xs[0]]
+    for x in xs[1:]:
+        out.append(_affine_op(out[-1], x))
+    return out
+
+
+@pytest.mark.parametrize("n,t", [(16, 2), (64, 4), (100, 8), (37, 5)])
+@pytest.mark.parametrize("stealing", [False, True])
+def test_scan_correct(n, t, stealing):
+    xs = [(i % 7 + 1, i) for i in range(n)]
+    out, stats = work_stealing_scan(_affine_op, xs, t, stealing=stealing)
+    assert out == _seq_scan(xs)
+
+
+@pytest.mark.parametrize("stealing", [False, True])
+def test_boundaries_partition(stealing):
+    """Invariant: thread intervals form a contiguous partition of [0, N)."""
+    n, t = 97, 6
+    xs = [(1, i) for i in range(n)]
+    _, stats = work_stealing_scan(_affine_op, xs, t, stealing=stealing)
+    b = sorted(stats.boundaries)
+    assert b[0][0] == 0 and b[-1][1] == n - 1
+    for (l1, r1), (l2, r2) in zip(b, b[1:]):
+        assert l2 == r1 + 1, b
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(8, 60), t=st.integers(2, 6), seed=st.integers(0, 1000))
+def test_property_every_element_once(n, t, seed):
+    """Property: stealing processes every element exactly once (any op order)."""
+    if t * 2 > n:
+        t = max(2, n // 2)
+    rng = np.random.default_rng(seed)
+    xs = [(int(rng.integers(1, 7)), i) for i in range(n)]
+    out, stats = work_stealing_scan(_affine_op, xs, t, stealing=True)
+    assert out == _seq_scan(xs)
+    covered = sorted(
+        i for lo, hi in stats.boundaries for i in range(lo, hi + 1)
+    )
+    assert covered == list(range(n))
+
+
+def test_stealing_balances_sleep_op():
+    """With an imbalanced (sleepy) operator, stealing reduces the busy-time
+    imbalance across threads vs the static split."""
+    n, t = 60, 3
+    rng = np.random.default_rng(1410)
+    # Imbalance concentrated in one region (like the paper's outliers).
+    delays = np.full(n, 0.001)
+    delays[: n // 3] = 0.008
+
+    def make_op():
+        def op(a, b):
+            idx = b[1] if isinstance(b, tuple) else 0
+            time.sleep(delays[idx % n])
+            return _affine_op(a, b)
+        return op
+
+    xs = [(i % 7 + 1, i) for i in range(n)]
+    _, st_static = static_reduce(make_op(), xs, t)
+    _, st_steal = stealing_reduce(make_op(), xs, t)
+    assert st_steal.imbalance() <= st_static.imbalance() + 0.05
+    assert st_steal.makespan <= st_static.makespan * 1.15
+
+
+def test_rebalance_boundaries():
+    costs = np.array([1.0] * 10 + [9.0] * 10)
+    new = rebalance_boundaries(costs, [(0, 9), (10, 19)])
+    assert new[0][0] == 0 and new[-1][1] == 19
+    assert new[0][1] >= 12  # fast region absorbs more elements
+    loads = [costs[lo: hi + 1].sum() for lo, hi in new]
+    assert max(loads) / min(loads) < 9.0  # was 9x imbalanced before
+
+
+def test_rebalance_noop_on_balanced():
+    costs = np.ones(32)
+    new = rebalance_boundaries(costs, [(0, 15), (16, 31)])
+    assert new == [(0, 15), (16, 31)]
+
+
+def test_seeded_scan():
+    """Seed (exclusive prefix from the global phase) composes correctly."""
+    xs = [(i % 5 + 1, i) for i in range(24)]
+    seed = (3, 7)
+    out, _ = work_stealing_scan(_affine_op, xs, 3, seed=seed)
+    ref = []
+    acc = seed
+    for x in xs:
+        acc = _affine_op(acc, x)
+        ref.append(acc)
+    assert out == ref
