@@ -1,0 +1,20 @@
+# Tier-1 verification + convenience targets (see ROADMAP.md).
+
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
+
+.PHONY: test test-fast bench quickstart
+
+# Tier-1: the full suite, fail-fast, exactly as CI / the roadmap runs it.
+test:
+	$(PY) -m pytest -x -q
+
+# Skip the slow multi-device subprocess and big-simulation tests.
+test-fast:
+	$(PY) -m pytest -x -q -m "not slow"
+
+bench:
+	$(PY) benchmarks/run.py
+
+quickstart:
+	$(PY) examples/quickstart.py

@@ -1,6 +1,8 @@
 """Wall-clock benchmarks of the in-model scan paths on this container's CPU:
-chunked SSD scan (reduce-then-scan) vs naive sequential recurrence, and the
-circuit choice for the inter-chunk phase.  Real timings, not simulation."""
+chunked SSD scan (reduce-then-scan) vs naive sequential recurrence, the
+circuit choice for the inter-chunk phase, and the unified scan engine
+(plan-cached dispatch vs the seed-style per-call circuit re-trace).
+Real timings, not simulation."""
 
 from __future__ import annotations
 
@@ -9,6 +11,10 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.core.circuits import get_circuit
+from repro.core.engine import scan as engine_scan
+from repro.core.engine.backends import exec_vector
+from repro.core.engine.plan import get_plan, lower
 from repro.kernels import ops, ref
 
 
@@ -54,4 +60,46 @@ def run():
                                                     backend="xla"))
     t = _time(f_block, q4, q4, q4)
     rows.append(("attention_blockwise_2k", t * 1e6, ""))
+    rows.extend(run_engine())
+    return rows
+
+
+def run_engine():
+    """Unified scan engine: plan-cached dispatch vs seed-style re-trace.
+
+    The acceptance bar for the engine refactor: for the add-operator
+    microbenchmark, dispatching through the cached plan must not be slower
+    than the seed ``jax_exec`` path, which re-ran the circuit trace loop
+    (identity resolution, gather/scatter index-list building) on every call.
+    """
+    rows = []
+    add = lambda a, b: a + b
+    n = 4096
+    x = jnp.arange(1.0, n + 1.0)
+    circuit = get_circuit("ladner_fischer", n)
+
+    def seed_style(x):
+        # The pre-engine jax_exec: symbolic trace + index building per call.
+        plan = lower(circuit)
+        y, _ = exec_vector(add, plan, x)
+        return y
+
+    def engine_cached(x):
+        return engine_scan(add, x, backend="vector", algorithm="ladner_fischer")
+
+    get_plan("ladner_fischer", n)  # warm the plan cache
+    t_seed = _time(seed_style, x, reps=5)
+    t_eng = _time(engine_cached, x, reps=5)
+    rows.append(("scan_add_seed_retrace_n4096", t_seed * 1e6, ""))
+    rows.append(("scan_add_engine_cached_n4096", t_eng * 1e6,
+                 f"speedup_vs_retrace={t_seed / t_eng:.2f}x"))
+    t_auto = _time(lambda x: engine_scan(add, x), x, reps=5)
+    rows.append(("scan_add_engine_dispatch_n4096", t_auto * 1e6,
+                 "cost-model dispatch"))
+    t_pl = _time(
+        lambda x: engine_scan(add, x, backend="pallas", num_blocks=8),
+        x, reps=3,
+    )
+    rows.append(("scan_add_pallas_tiles_n4096", t_pl * 1e6,
+                 "tile-scan kernels (interpret on CPU)"))
     return rows

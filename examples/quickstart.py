@@ -11,6 +11,7 @@ import numpy as np
 
 from repro.core.circuits import analyze, get_circuit
 from repro.core.deformation import compose_batched, make_deformation
+from repro.core.engine import available_backends, cache_stats, dispatch, scan
 from repro.core.scan import blocked_scan, prefix_scan
 from repro.core.work_stealing import static_reduce, stealing_reduce
 
@@ -37,6 +38,23 @@ for alg in ["ladner_fischer", "dissemination", "blelloch"]:
 y = blocked_scan(compose_batched, defs, num_blocks=8,
                  strategy="reduce_then_scan", algorithm="ladner_fischer")
 print(f"  blocked (reduce-then-scan)      = {np.asarray(y['shift'][-1])}")
+
+# ------------------------------------------------------- the unified engine
+print("\n== Unified scan engine (circuit -> plan -> backend) ==")
+print(f"  registered backends: {available_backends()}")
+# One entry point; the cost model picks backend + circuit + block size.
+y = scan(compose_batched, defs)
+print(f"  scan(op, xs) auto               = {np.asarray(y['shift'][-1])}")
+d = dispatch(len(defs['angle']), domain='array', op_cost=10.0)
+print(f"  10 s/op operator would dispatch to: {d.backend} "
+      f"({d.strategy}, {d.reason})")
+# Explicit backends all consume the same cached plans:
+y = scan(jnp.add, jnp.arange(1.0, 65.0), backend="pallas", num_blocks=8)
+print(f"  pallas tile-scan cumsum[-1]     = {float(y[-1]):.0f}")
+y = scan(lambda a, b: a + b, list(range(1, 65)), backend="worksteal",
+         num_threads=3)
+print(f"  worksteal cumsum[-1]            = {y[-1]}")
+print(f"  plan cache: {cache_stats()['plan']}")
 
 # ------------------------------------------------------------ work stealing
 print("\n== Work stealing on an imbalanced operator (paper Alg. 1) ==")

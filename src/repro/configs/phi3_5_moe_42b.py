@@ -24,5 +24,8 @@ SMOKE = dataclasses.replace(
     name="phi3.5-moe-smoke",
     n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
     n_experts=4, vocab_size=512, moe_group_size=64,
-    param_dtype="float32", compute_dtype="float32",
+    # Full fp32 including the KV cache: a bf16 cache perturbs decode hidden
+    # states just enough to flip top-k router choices vs the fp32 forward
+    # pass (routing is discontinuous), breaking prefill/decode parity.
+    param_dtype="float32", compute_dtype="float32", cache_dtype="float32",
 )

@@ -1,3 +1,13 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+"""Core prefix-scan system (the paper's primary contribution).
+
+Layers (docs/ARCHITECTURE.md has the full picture):
+
+  circuits.py        prefix-circuit IR + generators (paper Table 1)
+  engine/            circuit → plan compiler, backend registry, cost-model
+                     dispatch — the one public ``scan()`` entry point
+  scan.py            vector/element execution + blocked local-global-local
+  distributed.py     shard_map collective execution across mesh axes
+  work_stealing.py   threaded Algorithm-1 stealing (paper §4.3)
+  simulator.py       deterministic virtual-time twin for >10^3-core studies
+  registration.py    the image-registration operator the paper scans
+"""

@@ -12,10 +12,13 @@ parallel (all reads happen before any write within a round):
                      order matters for non-commutative operators)
   ("z", i):         y[i] = identity                    free (bookkeeping only)
 
-A single circuit is then executed by several executors (JAX vectorized, Python
-per-element, threaded work-stealing, discrete-event simulator, and shard_map
-collective execution) — see ``scan.py``, ``work_stealing.py``, ``simulator.py``
-and ``distributed.py``.
+A circuit is never executed directly: the engine (``engine/plan.py``) lowers
+it once into an :class:`~repro.core.engine.plan.ExecutionPlan` — static
+gather/scatter index arrays with identities resolved — which the registered
+backends consume (JAX vectorized, Python per-element, threaded work-stealing,
+Pallas tile kernels, discrete-event simulation, shard_map collectives).  See
+``engine/``, ``scan.py``, ``work_stealing.py``, ``simulator.py``,
+``distributed.py`` and docs/ARCHITECTURE.md.
 
 Work/depth of every generated circuit is validated against Table 1 of the paper
 in ``tests/test_circuits.py`` via :func:`analyze`, which symbolically executes

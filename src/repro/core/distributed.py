@@ -1,10 +1,15 @@
 """Distributed prefix scan over mesh axes (paper §4.1/§4.2) — shard_map/ppermute.
 
-The circuit IR is executed *across devices*: one scan element per device along
-a named mesh axis.  One-to-one rounds lower to ``lax.ppermute`` (the MPI
-point-to-point sends of the paper); multicast rounds — Ladner–Fischer's
-MPI_Bcast steps — lower to ``lax.all_gather`` + a dynamic select, the
-TPU-idiomatic multicast (DESIGN.md §3).
+A precompiled :class:`~repro.core.engine.plan.ExecutionPlan` is executed
+*across devices*: one scan element per device along a named mesh axis, one
+plan round per communication round.  The per-round permutation tables, source
+indices and destination masks are resolved once by
+:func:`repro.core.engine.backends.lower_collective` (LRU-cached), not
+re-derived from the circuit IR on every call.  One-to-one rounds lower to
+``lax.ppermute`` (the MPI point-to-point sends of the paper); multicast
+rounds — Ladner–Fischer's MPI_Bcast steps — lower to ``lax.all_gather`` + a
+dynamic select, the TPU-idiomatic multicast (DESIGN.md §3).  This module is
+the engine's ``collective`` backend.
 
 Hierarchy: the paper replaces P flat ranks by P' ranks x T threads.  Here the
 hierarchy is mesh axes — ``("pod", "data")``: an inner scan on the fast ICI
@@ -25,7 +30,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from .circuits import get_circuit
+from .engine.backends import lower_collective
+from .engine.plan import ExecutionPlan, get_plan
 from .scan import _local_inclusive_scan, _local_reduce, _tree_concat
 
 Op = Callable[[Any, Any], Any]
@@ -42,6 +48,32 @@ def _where_tree(mask, a, b):
     return jax.tree.map(lambda x, y: jnp.where(mask, x, y), a, b)
 
 
+def collective_scan_plan(op: Op, x, axis_name: str, plan: ExecutionPlan) -> Any:
+    """Execute a precompiled plan's rounds as collectives across ``axis_name``.
+
+    Every device runs every round's operator application and masks the result
+    — the SPMD analogue of idle workers in the paper's Figure 2.
+    """
+    rounds = lower_collective(plan)  # raises for non-combine-only circuits
+    my = lax.axis_index(axis_name)
+    y = x
+    for rnd in rounds:
+        dst_mask = jnp.asarray(rnd.dst_mask)[my]
+        if rnd.fanout == 1:
+            recv = lax.ppermute(y, axis_name, perm=list(rnd.perm))
+        else:
+            # Multicast round (Ladner-Fischer broadcast): all_gather + select.
+            gathered = lax.all_gather(y, axis_name, axis=0)
+            src_idx = jnp.asarray(rnd.src_of)[my]
+            recv = jax.tree.map(
+                lambda t: lax.dynamic_index_in_dim(t, src_idx, 0, keepdims=False),
+                gathered,
+            )
+        combined = op(recv, y)
+        y = _where_tree(dst_mask, combined, y)
+    return y
+
+
 def collective_scan(
     op: Op,
     x,
@@ -52,42 +84,13 @@ def collective_scan(
 ) -> Any:
     """Inclusive prefix scan of one element per device across ``axis_name``.
 
-    Executes the chosen prefix circuit with ppermute/all_gather rounds.  Every
-    device runs every round's operator application and masks the result — the
-    SPMD analogue of idle workers in the paper's Figure 2.
+    Lowers the chosen circuit to a plan (cached across calls) and executes it
+    with ppermute/all_gather rounds via :func:`collective_scan_plan`.
     """
     p = _axis_size(axis_name, axis_size)
     if p == 1:
         return x
-    circuit = get_circuit(algorithm, p)
-    my = lax.axis_index(axis_name)
-    y = x
-    for rnd in circuit.rounds:
-        pairs = [(e[1], e[2]) for e in rnd]
-        if any(e[0] != "c" for e in rnd):
-            raise NotImplementedError(
-                f"collective_scan supports combine-only circuits, got {circuit.name}"
-            )
-        srcs = [s for s, _ in pairs]
-        dsts = [d for _, d in pairs]
-        fanout = max(srcs.count(s) for s in set(srcs))
-        dst_mask = jnp.isin(my, jnp.asarray(dsts))
-        if fanout == 1:
-            recv = lax.ppermute(y, axis_name, perm=pairs)
-        else:
-            # Multicast round (Ladner-Fischer broadcast): all_gather + select.
-            gathered = lax.all_gather(y, axis_name, axis=0)
-            src_of = [0] * p
-            for s, d in pairs:
-                src_of[d] = s
-            src_idx = jnp.asarray(src_of)[my]
-            recv = jax.tree.map(
-                lambda t: lax.dynamic_index_in_dim(t, src_idx, 0, keepdims=False),
-                gathered,
-            )
-        combined = op(recv, y)
-        y = _where_tree(dst_mask, combined, y)
-    return y
+    return collective_scan_plan(op, x, axis_name, get_plan(algorithm, p))
 
 
 def exclusive_shift(x, axis_name: str, *, axis_size: Optional[int] = None):

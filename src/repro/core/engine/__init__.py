@@ -1,0 +1,257 @@
+"""The unified scan engine: circuit → plan compiler, pluggable backends,
+cost-model dispatch.
+
+Layers (see docs/ARCHITECTURE.md):
+
+  circuits.py   prefix-circuit IR (rounds of combine/cross/zero entries)
+  plan.py       ``lower``: circuit → :class:`ExecutionPlan` — static
+                gather/scatter index arrays, move lists and identity masks
+                resolved once, LRU-cached
+  backends.py   registry of plan-consuming executors
+                (vector / element / blocked / worksteal / collective /
+                simulate, + pallas from pallas_backend.py)
+  cost.py       operator cost model + dispatcher (backend, circuit, block
+                size from an op-cost estimate — microbenchmark or hint)
+
+Public entry point::
+
+    from repro.core.engine import scan
+
+    ys = scan(op, xs)                            # cost-model dispatch
+    ys = scan(op, xs, algorithm="blelloch")      # pick the circuit
+    ys = scan(op, xs, backend="blocked", num_blocks=8)
+    ys = scan(op, items, backend="worksteal", num_threads=4)
+    ys = scan(op, x, backend="collective", axis_name="x", axis_size=8)
+    ys = scan(op, xs, where=[True, ...])         # masked elements = identity
+
+``xs`` may be a pytree of arrays with a common leading axis (vectorized
+domain: the operator is batched, like ``jax.lax.associative_scan``) or a
+Python list of opaque items (element domain: the operator combines single
+items — the seconds-long registration operator).  ``scan`` always returns
+the inclusive prefix scan in the same container type.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Optional, Sequence
+
+from .backends import (
+    available_backends,
+    dtype_struct,
+    get_backend,
+    lower_collective,
+    lowered_cache,
+    register_backend,
+)
+from .cost import (
+    CHEAP_OP_COST,
+    EXPENSIVE_OP_COST,
+    Dispatch,
+    dispatch,
+    measure_op_cost,
+)
+from .plan import ExecutionPlan, PlanRound, get_plan, lower, plan_cache
+
+# Registers the "pallas" backend on import.
+from . import pallas_backend as _pallas_backend  # noqa: F401
+
+Op = Callable[[Any, Any], Any]
+
+__all__ = [
+    "scan",
+    "lower",
+    "get_plan",
+    "ExecutionPlan",
+    "PlanRound",
+    "register_backend",
+    "get_backend",
+    "available_backends",
+    "lower_collective",
+    "dispatch",
+    "Dispatch",
+    "measure_op_cost",
+    "plan_cache",
+    "lowered_cache",
+    "cache_stats",
+    "dtype_struct",
+]
+
+
+def cache_stats():
+    """Hit/miss/size counters of the plan and backend-lowering caches."""
+    return {"plan": plan_cache.stats(), "lowered": lowered_cache.stats()}
+
+
+def _next_pow2(n: int) -> int:
+    m = 1
+    while m < n:
+        m *= 2
+    return m
+
+
+def _leading_n(xs) -> int:
+    import jax
+
+    leaves = jax.tree.leaves(xs)
+    if not leaves:
+        raise ValueError("scan of an empty pytree")
+    return leaves[0].shape[0]
+
+
+def _pad_array(xs, m: int, n: int):
+    import jax
+    import jax.numpy as jnp
+
+    return jax.tree.map(
+        lambda t: jnp.concatenate(
+            [t, jnp.broadcast_to(t[:1], (m - n,) + t.shape[1:])], axis=0
+        ),
+        xs,
+    )
+
+
+def scan(
+    op: Op,
+    xs,
+    *,
+    where: Optional[Sequence[bool]] = None,
+    backend: Optional[str] = None,
+    algorithm: Optional[str] = None,
+    op_cost: Optional[float] = None,
+    measure: bool = False,
+    num_blocks: Optional[int] = None,
+    num_threads: Optional[int] = None,
+    strategy: Optional[str] = None,
+    axis_name: Optional[str] = None,
+    axis_size: Optional[int] = None,
+    stealing: bool = True,
+    interpret: Optional[bool] = None,
+    workers: Optional[int] = None,
+):
+    """Inclusive prefix scan of ``xs`` with associative ``op``.
+
+    With no ``backend``, the cost-model dispatcher picks backend + circuit +
+    block size from ``op_cost`` (seconds per application; set
+    ``measure=True`` to microbenchmark it).  ``where`` is a *static* boolean
+    mask — False elements are treated as the operator identity (they never
+    reach ``op``); positions before the first True element pass through
+    unchanged.
+
+    Backend-specific options: ``num_blocks``/``strategy`` (blocked, pallas
+    tiles), ``num_threads``/``stealing`` (worksteal), ``axis_name``/
+    ``axis_size`` (collective — call inside shard_map), ``interpret``
+    (pallas).  All backends consume the same precompiled
+    :class:`ExecutionPlan`, cached across calls.
+    """
+    element_domain = isinstance(xs, list)
+
+    # --- collective: SPMD over a mesh axis; xs is this device's element.
+    if backend == "collective":
+        if axis_name is None:
+            raise ValueError("backend='collective' requires axis_name")
+        if where is not None:
+            raise NotImplementedError(
+                "where masks are not supported by the collective backend"
+            )
+        from ..distributed import _axis_size
+
+        p = _axis_size(axis_name, axis_size)
+        if p == 1:
+            return xs
+        plan = get_plan(algorithm or "ladner_fischer", p)
+        ys, _ = get_backend("collective")(op, plan, xs, axis_name=axis_name)
+        return ys
+
+    n = len(xs) if element_domain else _leading_n(xs)
+    if n == 0:
+        return xs
+    if n == 1:
+        return list(xs) if element_domain else xs
+
+    # --- dispatch
+    if backend is None:
+        cost = op_cost
+        if cost is None and measure:
+            cost = measure_op_cost(op, xs)
+        d = dispatch(n, domain="element" if element_domain else "array",
+                     op_cost=cost, workers=workers)
+        backend = d.backend
+        if where is not None and backend in ("blocked", "worksteal"):
+            # Decomposition backends cannot honor identity masks; fall back
+            # to the flat plan executors, which resolve them at plan time.
+            backend = "element" if element_domain else "vector"
+        algorithm = algorithm or d.algorithm
+        num_blocks = num_blocks if num_blocks is not None else d.num_blocks
+        num_threads = num_threads if num_threads is not None else d.num_threads
+        strategy = strategy or d.strategy
+    elif where is not None and (
+        backend in ("blocked", "worksteal")
+        or (backend == "pallas" and num_blocks is not None and num_blocks > 1)
+    ):
+        raise NotImplementedError(
+            f"where masks are not supported by the {backend!r} backend's "
+            "local-global-local decomposition; use vector/element/pallas "
+            "(rounds mode) or drop the mask"
+        )
+    algorithm = algorithm or "ladner_fischer"
+    strategy = strategy or "reduce_then_scan"
+    fn = get_backend(backend)
+
+    # --- backends with their own decomposition (plan covers the small phase)
+    if backend == "blocked":
+        p = num_blocks or 8
+        # An exclusive (Blelloch) global phase needs padding + shift handling
+        # inside prefix_scan; only inclusive plans execute directly.
+        plan = None if algorithm == "blelloch" else get_plan(algorithm, p)
+        ys, _ = fn(op, plan, xs, num_blocks=p, strategy=strategy,
+                   algorithm=algorithm)
+        return ys
+    if backend == "worksteal":
+        t = num_threads or 4
+        alg = algorithm if algorithm in ("dissemination", "ladner_fischer",
+                                         "brent_kung", "sklansky",
+                                         "sequential") else "dissemination"
+        plan = get_plan(alg, t) if t > 1 else None
+        ys, _ = fn(op, plan, xs, num_threads=t, stealing=stealing)
+        return ys
+    if backend == "pallas" and num_blocks is not None and num_blocks > 1:
+        # Tiles mode: the plan covers the global phase over tile totals.
+        if algorithm == "blelloch":
+            algorithm = "ladner_fischer"  # global phase must be inclusive
+        plan = get_plan(algorithm, num_blocks)
+        ys, _ = fn(op, plan, xs, interpret=interpret)
+        return ys
+
+    # --- flat circuit execution (vector / element / pallas-rounds / simulate)
+    mask = list(where) if where is not None else None
+    if mask is not None:
+        if len(mask) != n:
+            raise ValueError(f"where mask length {len(mask)} != n {n}")
+        mask = [not bool(v) for v in mask]  # where=True means *valid*
+    if algorithm == "blelloch":
+        if mask is not None:
+            raise NotImplementedError(
+                "where masks are not supported with the exclusive Blelloch "
+                "circuit; use an inclusive algorithm"
+            )
+        m = _next_pow2(n)
+        plan = get_plan("blelloch", m, n_valid=n if m != n else None)
+        if element_domain:
+            padded = list(xs) + [xs[0]] * (m - n)
+            excl, total = fn(op, plan, padded, interpret=interpret)
+            if m > n:
+                return excl[1 : n + 1]
+            return excl[1:n] + [total]
+        padded = _pad_array(xs, m, n) if m != n else xs
+        excl, total = fn(op, plan, padded, interpret=interpret)
+        import jax
+        import jax.numpy as jnp
+
+        if m > n:
+            return jax.tree.map(lambda t: t[1 : n + 1], excl)
+        last = jax.tree.map(lambda t: t[None], total)
+        body = jax.tree.map(lambda t: t[1:n], excl)
+        return jax.tree.map(lambda b, l: jnp.concatenate([b, l], 0), body, last)
+    plan = get_plan(algorithm, n, mask=mask)
+    ys, _ = fn(op, plan, xs, interpret=interpret)
+    return ys

@@ -1,0 +1,355 @@
+"""Backend registry + the plan-consuming executors.
+
+A backend is a callable ``(op, plan, xs, **opts) -> (ys, total)`` executing a
+precompiled :class:`~repro.core.engine.plan.ExecutionPlan`.  ``total`` is the
+all-elements reduction when the plan makes it available (Blelloch root before
+zeroing), else None.  Registered backends (see :func:`register_backend`):
+
+  vector     gather → batched op → scatter per round in JAX (cheap operators)
+  element    per-element Python execution (seconds-long operators; the oracle)
+  blocked    local–global–local over one device; the plan drives the global
+             phase over block partials (paper §4.1)
+  worksteal  threaded reduce-then-scan with Algorithm-1 stealing; the plan
+             drives the phase-2 scan over thread partials (paper §4.3)
+  collective shard_map ppermute/all_gather execution across a mesh axis —
+             one plan round per communication round (paper §4.1/§4.2)
+  simulate   per-element execution that additionally tracks deterministic
+             virtual time per wire (the discrete-event model of simulator.py)
+  pallas     fused gather–combine–scatter tile kernels
+             (registered by ``repro.core.engine.pallas_backend``)
+
+The registry is the extension point later scaling PRs plug into (sharded
+serving, async batching, multi-backend dispatch).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .plan import ExecutionPlan, LRUCache, PlanRound
+
+Op = Callable[[Any, Any], Any]
+Backend = Callable[..., Tuple[Any, Any]]
+
+_REGISTRY: Dict[str, Backend] = {}
+
+#: Backend-specific lowering cache, keyed on
+#: (plan identity, backend, dtype-struct) — e.g. the Pallas backend's one-hot
+#: gather/scatter matrices or device-resident index arrays.
+lowered_cache = LRUCache(maxsize=256)
+
+
+def register_backend(name: str, fn: Backend, *, overwrite: bool = False) -> None:
+    if name in _REGISTRY and not overwrite:
+        raise ValueError(f"backend {name!r} already registered")
+    _REGISTRY[name] = fn
+
+
+def get_backend(name: str) -> Backend:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown scan backend {name!r}; available: {sorted(_REGISTRY)}"
+        ) from None
+
+
+def available_backends() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+def plan_key(plan: ExecutionPlan) -> Tuple:
+    return (plan.circuit.name, plan.n, plan.mask)
+
+
+def dtype_struct(xs) -> Tuple:
+    """Hashable (shape-tail, dtype) signature of a pytree of arrays."""
+    import jax
+
+    return tuple(
+        (tuple(t.shape[1:]), str(t.dtype)) for t in jax.tree.leaves(xs)
+    )
+
+
+# ---------------------------------------------------------------------------
+# vector backend — vectorized JAX execution of plan rounds
+# ---------------------------------------------------------------------------
+
+
+def _tree_index(xs, i: int):
+    import jax
+
+    return jax.tree.map(lambda t: t[i], xs)
+
+
+def _tree_concat(parts):
+    import jax
+    import jax.numpy as jnp
+
+    return jax.tree.map(lambda *ts: jnp.concatenate(ts, axis=0), *parts)
+
+
+def _round_device_indices(plan: ExecutionPlan, r: int):
+    """Device-resident index arrays for round r, memoized on the plan.
+
+    ``ensure_compile_time_eval`` keeps the arrays concrete even when the
+    first execution happens inside a jit trace — caching a tracer would leak
+    it into later traces."""
+    import jax
+    import jax.numpy as jnp
+
+    cached = plan.scratch.get(("jidx", r))
+    if cached is None:
+        rnd = plan.rounds[r]
+        with jax.ensure_compile_time_eval():
+            cached = (
+                jnp.asarray(rnd.a_idx),
+                jnp.asarray(rnd.b_idx),
+                jnp.asarray(rnd.mv_src),
+                jnp.asarray(rnd.upd_idx),
+            )
+        plan.scratch[("jidx", r)] = cached
+    return cached
+
+
+def exec_vector(op: Op, plan: ExecutionPlan, xs, **_) -> Tuple[Any, Any]:
+    """One gather → batched-op → scatter step per plan round."""
+    import jax
+
+    y = xs
+    total = None
+    for r, rnd in enumerate(plan.rounds):
+        if rnd.capture_total is not None:
+            total = _tree_index(y, rnd.capture_total)
+        if not rnd.num_combines and not rnd.num_moves:
+            continue
+        a_idx, b_idx, mv_src, upd_idx = _round_device_indices(plan, r)
+        vals = []
+        if rnd.num_combines:
+            vals.append(
+                op(
+                    jax.tree.map(lambda t: t[a_idx], y),
+                    jax.tree.map(lambda t: t[b_idx], y),
+                )
+            )
+        if rnd.num_moves:
+            vals.append(jax.tree.map(lambda t: t[mv_src], y))
+        v = _tree_concat(vals) if len(vals) > 1 else vals[0]
+        y = jax.tree.map(lambda t, u: t.at[upd_idx].set(u), y, v)
+    return y, total
+
+
+# ---------------------------------------------------------------------------
+# element backend — per-element execution (the oracle; expensive operators)
+# ---------------------------------------------------------------------------
+
+
+def exec_element(op: Op, plan: ExecutionPlan, xs: Sequence[Any], **_) -> Tuple[list, Any]:
+    y: List[Any] = list(xs)
+    total = None
+    for rnd in plan.rounds:
+        if rnd.capture_total is not None:
+            total = y[rnd.capture_total]
+        if not rnd.num_combines and not rnd.num_moves:
+            continue
+        reads = list(y)  # all reads observe pre-round values
+        for a, b, out, _fan, _cs in rnd.combines:
+            y[out] = op(reads[a], reads[b])
+        for src, out, _fan in rnd.moves:
+            y[out] = reads[src]
+    return y, total
+
+
+# ---------------------------------------------------------------------------
+# simulate backend — element execution + deterministic virtual time
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class SimTrace:
+    """Virtual-time trace of one simulated plan execution."""
+
+    makespan: float
+    work: int
+    ready: np.ndarray  # per-wire completion time
+
+
+#: Trace of the most recent ``simulate`` backend execution (inspectable).
+last_trace: Optional[SimTrace] = None
+
+
+def exec_simulate(
+    op: Op,
+    plan: ExecutionPlan,
+    xs: Sequence[Any],
+    *,
+    op_cost: float = 1.0,
+    costs: Optional[Sequence[float]] = None,
+    latency: float = 0.0,
+    **_,
+) -> Tuple[list, Any]:
+    """Execute the plan per-element while tracking virtual time per wire.
+
+    ``costs``: optional per-*combine-output-wire* operator cost (defaults to
+    the scalar ``op_cost``); ``latency``: per-message transfer time for a
+    combine/move whose source is another wire.  The full distributed model
+    (noise, multicast factors, hierarchy) lives in ``core/simulator.py`` —
+    this backend is its single-circuit kernel, useful to compare circuit
+    makespans while also producing real values.
+    """
+    global last_trace
+    y: List[Any] = list(xs)
+    ready = np.zeros(plan.n, dtype=np.float64)
+    total = None
+    work = 0
+    for rnd in plan.rounds:
+        if rnd.capture_total is not None:
+            total = y[rnd.capture_total]
+        if not rnd.num_combines and not rnd.num_moves:
+            continue
+        reads = list(y)
+        t_reads = ready.copy()
+        for a, b, out, _fan, cs in rnd.combines:
+            y[out] = op(reads[a], reads[b])
+            c = float(costs[out]) if costs is not None else float(op_cost)
+            t_a = t_reads[a] + (latency if cs == a else 0.0)
+            t_b = t_reads[b] + (latency if cs == b else 0.0)
+            ready[out] = max(t_a, t_b) + c
+            work += 1
+        for src, out, _fan in rnd.moves:
+            y[out] = reads[src]
+            ready[out] = t_reads[src] + latency
+    last_trace = SimTrace(makespan=float(ready.max(initial=0.0)), work=work,
+                          ready=ready)
+    return y, total
+
+
+# ---------------------------------------------------------------------------
+# collective lowering — plan rounds as ppermute/all_gather schedules
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveRound:
+    """One communication round over a mesh axis of size ``p``.
+
+    ``perm``: (src, dst) pairs for ``lax.ppermute`` (fanout == 1 rounds).
+    ``src_of``: per-device source index for all_gather+select multicast rounds.
+    ``dst_mask``: boolean per device — which devices apply the operator.
+    """
+
+    perm: Tuple[Tuple[int, int], ...]
+    src_of: np.ndarray
+    dst_mask: np.ndarray
+    fanout: int
+
+
+def lower_collective(plan: ExecutionPlan) -> Tuple[CollectiveRound, ...]:
+    """Lower a combine-only plan into per-round collective schedules."""
+    if not plan.combine_only():
+        raise NotImplementedError(
+            f"collective execution supports combine-only circuits, got "
+            f"{plan.circuit.name} (moves={plan.num_moves()}, "
+            f"total={plan.total_available})"
+        )
+    key = (plan_key(plan), "collective")
+    cached = lowered_cache.get(key)
+    if cached is not None:
+        return cached
+    p = plan.n
+    out: List[CollectiveRound] = []
+    for rnd in plan.rounds:
+        pairs = [(c[4], c[2]) for c in rnd.combines]  # (comm_src, dst)
+        srcs = [s for s, _ in pairs]
+        fanout = max((srcs.count(s) for s in set(srcs)), default=1)
+        src_of = np.zeros(p, dtype=np.int32)
+        dst_mask = np.zeros(p, dtype=bool)
+        for s, d in pairs:
+            src_of[d] = s
+            dst_mask[d] = True
+        out.append(
+            CollectiveRound(
+                perm=tuple(pairs), src_of=src_of, dst_mask=dst_mask, fanout=fanout
+            )
+        )
+    result = tuple(out)
+    lowered_cache.put(key, result)
+    return result
+
+
+# ---------------------------------------------------------------------------
+# adapters — blocked / worksteal / collective reuse the refactored executors
+# (lazy imports: those modules themselves consume plans from this package)
+# ---------------------------------------------------------------------------
+
+
+def exec_blocked(
+    op: Op,
+    plan: Optional[ExecutionPlan],
+    xs,
+    *,
+    num_blocks: Optional[int] = None,
+    strategy: str = "reduce_then_scan",
+    algorithm: str = "ladner_fischer",
+    **_,
+) -> Tuple[Any, Any]:
+    """Local–global–local over one device; ``plan`` drives the global phase
+    over the block partials when it is an inclusive width-P plan (a Blelloch
+    global phase needs padding/shift handling, so ``plan=None`` routes it
+    through prefix_scan instead — same cache, extra conversion logic)."""
+    from ..scan import blocked_scan
+
+    p = num_blocks if num_blocks is not None else (plan.n if plan else 8)
+    usable = plan is not None and not plan.exclusive and plan.n == p
+    ys = blocked_scan(op, xs, num_blocks=p, strategy=strategy,
+                      algorithm=algorithm,
+                      global_plan=plan if usable else None)
+    return ys, None
+
+
+def exec_worksteal(
+    op: Op,
+    plan: ExecutionPlan,
+    xs: Sequence[Any],
+    *,
+    num_threads: Optional[int] = None,
+    stealing: bool = True,
+    seed: Any = None,
+    **_,
+) -> Tuple[list, Any]:
+    """Threaded reduce-then-scan (Algorithm 1); ``plan`` is the phase-2
+    circuit over the thread partials (its width == num_threads)."""
+    from ..work_stealing import work_stealing_scan
+
+    t = num_threads if num_threads is not None else plan.n
+    ys, _stats = work_stealing_scan(
+        op, list(xs), t,
+        plan=plan if plan is not None and plan.n == t else None,
+        stealing=stealing, seed=seed,
+    )
+    return ys, None
+
+
+def exec_collective(
+    op: Op,
+    plan: ExecutionPlan,
+    x,
+    *,
+    axis_name: str,
+    **_,
+) -> Tuple[Any, Any]:
+    """SPMD execution across ``axis_name`` — call inside shard_map."""
+    from ..distributed import collective_scan_plan
+
+    return collective_scan_plan(op, x, axis_name, plan), None
+
+
+register_backend("vector", exec_vector)
+register_backend("element", exec_element)
+register_backend("simulate", exec_simulate)
+register_backend("blocked", exec_blocked)
+register_backend("worksteal", exec_worksteal)
+register_backend("collective", exec_collective)

@@ -1,54 +1,47 @@
-"""Executors for prefix circuits + the public scan API.
+"""Single-process scan executors + the legacy public scan API.
 
-Two single-process executors live here:
+This module is now a thin layer over the unified scan engine
+(``repro.core.engine`` — see docs/ARCHITECTURE.md): circuits are *lowered
+once* into backend-neutral :class:`~repro.core.engine.plan.ExecutionPlan`
+objects (static gather/scatter index arrays, move lists, identity masks) and
+executed by registered backends.  The historical entry points are kept:
 
-* :func:`jax_exec` — vectorized execution of a circuit: per round, gather the
-  operand slices, apply the (batched) operator once, scatter.  Identity values
-  (Blelloch) are tracked *symbolically* at trace time, so no masks are emitted:
-  a combine with an identity operand compiles to a move.
+* :func:`jax_exec` — the engine's ``vector`` backend: per round, gather the
+  operand slices, apply the (batched) operator once, scatter.  Identity
+  values (Blelloch padding) are resolved symbolically *at plan time*, so a
+  combine with an identity operand compiles to a move — and, unlike the old
+  per-call trace loop, the resolution happens once per (circuit, mask), not
+  once per call.
 
-* :func:`python_exec` — per-element execution for expensive operators (the
-  image-registration operator takes seconds per application; batching is
-  meaningless there).  Also the oracle used by the property tests.
+* :func:`python_exec` — the engine's ``element`` backend: per-element
+  execution for expensive operators (the image-registration operator takes
+  seconds per application; batching is meaningless there).  Also the oracle
+  used by the property tests.
+
+* :func:`prefix_scan` / :func:`exclusive_scan` — circuit scans of a pytree
+  of arrays; equivalent to ``engine.scan(op, xs, backend="vector")``.
 
 ``blocked_scan`` implements the paper's local–global–local decomposition
-(§4.1) for N >> P in pure JAX: *scan-then-map* (Fig. 6a) and *reduce-then-scan*
-(Fig. 6b), with any circuit as the global phase.  The distributed (shard_map)
-version is in ``distributed.py``; the thread work-stealing version in
-``work_stealing.py``.
+(§4.1) for N >> P in pure JAX: *scan-then-map* (Fig. 6a) and
+*reduce-then-scan* (Fig. 6b), with any circuit as the global phase; it backs
+the engine's ``blocked`` backend.  The distributed (shard_map) version is in
+``distributed.py``; the thread work-stealing version in ``work_stealing.py``;
+the Pallas tile version in ``engine/pallas_backend.py``.
 """
 
 from __future__ import annotations
 
-from typing import Any, Callable, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from .circuits import Circuit, get_circuit
+from .circuits import Circuit
+from .engine import scan as engine_scan
+from .engine.backends import exec_element, exec_vector
+from .engine.plan import get_plan
 
 Op = Callable[[Any, Any], Any]  # batched over the leading axis, pytree->pytree
-
-
-def _next_pow2(n: int) -> int:
-    m = 1
-    while m < n:
-        m *= 2
-    return m
-
-
-def _tree_gather(xs, idx):
-    idx = jnp.asarray(idx)
-    return jax.tree.map(lambda t: t[idx], xs)
-
-
-def _tree_scatter(ys, idx, vals):
-    idx = jnp.asarray(idx)
-    return jax.tree.map(lambda t, v: t.at[idx].set(v), ys, vals)
-
-
-def _tree_index(xs, i: int):
-    return jax.tree.map(lambda t: t[i], xs)
 
 
 def _tree_concat(parts):
@@ -69,108 +62,18 @@ def jax_exec(
 
     ``n_valid``: with padded inputs, elements at index >= n_valid are treated
     as identity (symbolically — they are never passed to ``op``).
+
+    The circuit is lowered (or fetched from the plan cache) and executed by
+    the engine's vectorized backend.
     """
-    n = circuit.n
-    is_id = [False] * n
-    if n_valid is not None:
-        for i in range(n_valid, n):
-            is_id[i] = True
-    y = xs
-    total = None
-    for rnd in circuit.rounds:
-        combines: List[Tuple[int, int, int]] = []  # (a, b, out): y[out] = op(a, b)
-        moves: List[Tuple[int, int]] = []          # (src, out):  y[out] = y[src]
-        new_id: List[Tuple[int, bool]] = []
-        for e in rnd:
-            kind = e[0]
-            if kind == "z":
-                i = e[1]
-                # The value at the root *before* zeroing is the full reduction.
-                total = _tree_index(y, i)
-                new_id.append((i, True))
-            elif kind == "c":
-                s, d = e[1], e[2]
-                if is_id[s]:
-                    pass  # y[d] unchanged
-                elif is_id[d]:
-                    moves.append((s, d))
-                    new_id.append((d, False))
-                else:
-                    combines.append((s, d, d))
-            elif kind == "x":
-                l, r = e[1], e[2]
-                # y[l] <- y[r]  (left child receives the parent prefix)
-                moves.append((r, l))
-                new_id.append((l, is_id[r]))
-                # y[r] <- y[r] . y[l]  (parent (.) left-subtree-sum)
-                if is_id[l]:
-                    pass  # y[r] unchanged
-                elif is_id[r]:
-                    moves.append((l, r))
-                    new_id.append((r, False))
-                else:
-                    combines.append((r, l, r))
-        # All gathers read the pre-round y.
-        upd_idx: List[int] = []
-        upd_val = []
-        if combines:
-            a_idx = [c[0] for c in combines]
-            b_idx = [c[1] for c in combines]
-            o_idx = [c[2] for c in combines]
-            res = op(_tree_gather(y, a_idx), _tree_gather(y, b_idx))
-            upd_idx.extend(o_idx)
-            upd_val.append(res)
-        if moves:
-            m_src = [m[0] for m in moves]
-            m_out = [m[1] for m in moves]
-            res = _tree_gather(y, m_src)
-            upd_idx.extend(m_out)
-            upd_val.append(res)
-        if upd_idx:
-            vals = _tree_concat(upd_val) if len(upd_val) > 1 else upd_val[0]
-            y = _tree_scatter(y, upd_idx, vals)
-        for i, v in new_id:
-            is_id[i] = v
-    return y, total
+    plan = get_plan(circuit, n_valid=n_valid)
+    return exec_vector(op, plan, xs)
 
 
 def python_exec(op: Op, circuit: Circuit, xs: Sequence[Any]) -> Tuple[list, Any]:
     """Reference per-element executor (lists of elements; op on single items)."""
-    n = circuit.n
-    y: List[Any] = list(xs)
-    is_id = [False] * n
-    total = None
-    for rnd in circuit.rounds:
-        reads = list(y)
-        rid = list(is_id)
-        for e in rnd:
-            kind = e[0]
-            if kind == "z":
-                total = reads[e[1]]
-                is_id[e[1]] = True
-            elif kind == "c":
-                s, d = e[1], e[2]
-                if rid[s]:
-                    pass
-                elif rid[d]:
-                    y[d] = reads[s]
-                    is_id[d] = False
-                else:
-                    y[d] = op(reads[s], reads[d])
-            elif kind == "x":
-                l, r = e[1], e[2]
-                y[l] = reads[r]
-                is_id[l] = rid[r]
-                if rid[l]:
-                    y[r] = reads[r]
-                    is_id[r] = rid[r]
-                elif rid[r]:
-                    y[r] = reads[l]
-                    is_id[r] = False
-                else:
-                    y[r] = op(reads[r], reads[l])
-                    is_id[r] = False
-    return y, total
+    plan = get_plan(circuit)
+    return exec_element(op, plan, xs)
 
 
 # ---------------------------------------------------------------------------
@@ -182,39 +85,12 @@ def prefix_scan(op: Op, xs, *, algorithm: str = "ladner_fischer") -> Any:
     """Inclusive prefix scan of ``xs`` (pytree, leading axis N) with ``op``.
 
     ``op`` must be associative and vectorized over the leading axis (the same
-    contract as ``jax.lax.associative_scan``).
+    contract as ``jax.lax.associative_scan``).  Equivalent to
+    ``engine.scan(op, xs, backend="vector", algorithm=algorithm)`` —
+    use :func:`repro.core.engine.scan` directly for cost-model dispatch and
+    the other backends.
     """
-    n = jax.tree.leaves(xs)[0].shape[0]
-    if n == 0:
-        return xs
-    if n == 1 or algorithm == "sequential":
-        if n == 1:
-            return xs
-        circuit = get_circuit("sequential", n)
-        ys, _ = jax_exec(op, circuit, xs)
-        return ys
-    if algorithm == "blelloch":
-        m = _next_pow2(n)
-        if m != n:
-            pad = jax.tree.map(
-                lambda t: jnp.concatenate(
-                    [t, jnp.broadcast_to(t[:1], (m - n,) + t.shape[1:])], axis=0
-                ),
-                xs,
-            )
-        else:
-            pad = xs
-        circuit = get_circuit("blelloch", m)
-        excl, total = jax_exec(op, circuit, pad, n_valid=n)
-        # inclusive[i] = exclusive[i+1] for i < n-1 ; inclusive[n-1] = total
-        if m > n:
-            return jax.tree.map(lambda t: t[1 : n + 1], excl)
-        last = jax.tree.map(lambda t: t[None], total)
-        body = jax.tree.map(lambda t: t[1:n], excl)
-        return _tree_concat([body, last])
-    circuit = get_circuit(algorithm, n)
-    ys, _ = jax_exec(op, circuit, xs)
-    return ys
+    return engine_scan(op, xs, backend="vector", algorithm=algorithm)
 
 
 def exclusive_scan(op: Op, xs, *, algorithm: str = "ladner_fischer") -> Any:
@@ -266,11 +142,16 @@ def blocked_scan(
     num_blocks: int,
     strategy: str = "reduce_then_scan",
     algorithm: str = "ladner_fischer",
+    global_plan=None,
 ) -> Any:
     """Local–global–local inclusive scan (paper §4.1) in a single process.
 
     N must be divisible by ``num_blocks`` (the paper's even-distribution case;
-    uneven segments are handled by the work-stealing executor).
+    uneven segments are handled by the work-stealing executor).  The global
+    phase over the P block partials executes ``global_plan`` directly when
+    given (an inclusive width-P :class:`ExecutionPlan`, e.g. from the
+    engine's ``blocked`` backend); otherwise the chosen ``algorithm`` runs
+    through the engine's plan-cached vector backend.
     """
     n = jax.tree.leaves(xs)[0].shape[0]
     p = num_blocks
@@ -279,12 +160,24 @@ def blocked_scan(
     k = n // p
     segs = jax.tree.map(lambda t: t.reshape((p, k) + t.shape[1:]), xs)
 
+    if global_plan is not None and (global_plan.exclusive or global_plan.n != p):
+        raise ValueError(
+            f"global_plan must be an inclusive width-{p} plan, got "
+            f"{global_plan.circuit.name} (n={global_plan.n})"
+        )
+
+    def _global_scan(partials):
+        if global_plan is not None:
+            ys, _ = exec_vector(op, global_plan, partials)
+            return ys
+        return prefix_scan(op, partials, algorithm=algorithm)
+
     if strategy == "scan_then_map":
         # Phase 1: local inclusive scan per segment (strict left-to-right).
         local = jax.vmap(lambda s: _local_inclusive_scan(op, s))(segs)
         partials = jax.tree.map(lambda t: t[:, -1], local)      # x_{l..r} per block
         # Phase 2: global circuit scan over P partials.
-        gscan = prefix_scan(op, partials, algorithm=algorithm)
+        gscan = _global_scan(partials)
         # Phase 3: combine exclusive global result into blocks 1..P-1.
         excl = jax.tree.map(lambda t: t[:-1], gscan)            # block i gets gscan[i-1]
         head = jax.tree.map(lambda t: t[:1], local)
@@ -295,7 +188,7 @@ def blocked_scan(
         # Phase 1: local reduction (order-free -> enables work stealing).
         partials = jax.vmap(lambda s: _local_reduce(op, s))(segs)
         # Phase 2: global circuit scan.
-        gscan = prefix_scan(op, partials, algorithm=algorithm)
+        gscan = _global_scan(partials)
         # Phase 3: local scan seeded with the exclusive global result.
         def seeded(seed, seg):
             seg0 = op(jax.tree.map(lambda t: t[None], seed), jax.tree.map(lambda t: t[:1], seg))

@@ -28,6 +28,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from .circuits import Circuit, analyze, get_circuit
+from .engine.plan import get_plan
 
 
 # ---------------------------------------------------------------------------
@@ -188,52 +189,30 @@ def _simulate_circuit(
 ) -> Tuple[np.ndarray, int]:
     """Run a prefix circuit over P ranks: returns (per-rank ready time, ops).
 
-    Combine at dst waits for both operands (src arrives after a message).
-    Each op application carries multiplicative system noise (NetworkModel)."""
+    The circuit is lowered to a precompiled plan (engine.plan, LRU-cached):
+    identity combines are already moves, and each primitive carries the
+    multicast fanout of its source wire.  A combine at dst waits for both
+    operands (the ``comm_src`` operand arrives after a message); each op
+    application carries multiplicative system noise (NetworkModel)."""
+    plan = get_plan(circuit)
     ready = avail.astype(np.float64).copy()
-    is_id = [False] * circuit.n
     ops = 0
     noise = net.noise_stream(sum(len(r) for r in circuit.rounds) + 1)
     n_i = 0
-    for rnd in circuit.rounds:
-        src_count: Dict[int, int] = {}
-        for e in rnd:
-            if e[0] in ("c", "x"):
-                src_count[e[1]] = src_count.get(e[1], 0) + 1
+    for rnd in plan.rounds:
         writes = []
-        for e in rnd:
-            if e[0] == "z":
-                writes.append((e[1], ready[e[1]], True))
-                continue
-            if e[0] == "c":
-                s, d = e[1], e[2]
-            else:  # "x"
-                s, d = e[2], e[1]  # move handled as free; combine below
-            fan = src_count.get(e[1], 1)
+        for a, b, out, fan, cs in rnd.combines:
             comm = net.bcast_time(fan) if fan > 1 else net.msg_time()
-            if e[0] == "c":
-                if is_id[s]:
-                    writes.append((d, ready[d], is_id[d]))
-                elif is_id[d]:
-                    writes.append((d, ready[s] + comm, False))
-                else:
-                    ops += 1
-                    c_op = op_cost * noise[n_i]; n_i += 1
-                    writes.append((d, max(ready[s] + comm, ready[d]) + c_op, False))
-            else:  # "x": y[l]<-y[r]; y[r]<-y[r].y[l]
-                l, r = e[1], e[2]
-                writes.append((l, ready[r] + comm, is_id[r]))
-                if is_id[l]:
-                    writes.append((r, ready[r], is_id[r]))
-                elif is_id[r]:
-                    writes.append((r, ready[l] + comm, False))
-                else:
-                    ops += 1
-                    c_op = op_cost * noise[n_i]; n_i += 1
-                    writes.append((r, max(ready[l] + comm, ready[r]) + c_op, False))
-        for d, tr, iid in writes:
+            ops += 1
+            c_op = op_cost * noise[n_i]; n_i += 1
+            t_a = ready[a] + (comm if cs == a else 0.0)
+            t_b = ready[b] + (comm if cs == b else 0.0)
+            writes.append((out, max(t_a, t_b) + c_op))
+        for src, out, fan in rnd.moves:
+            comm = net.bcast_time(fan) if fan > 1 else net.msg_time()
+            writes.append((out, ready[src] + comm))
+        for d, tr in writes:
             ready[d] = tr
-            is_id[d] = iid
     return ready, ops
 
 

@@ -31,8 +31,8 @@ import threading
 import time
 from typing import Any, Callable, List, Optional, Sequence, Tuple
 
-from .circuits import analyze, get_circuit
-from .scan import python_exec
+from .engine.backends import exec_element
+from .engine.plan import ExecutionPlan, get_plan
 
 Op = Callable[[Any, Any], Any]
 
@@ -235,13 +235,16 @@ def work_stealing_scan(
     algorithm: str = "dissemination",
     stealing: bool = True,
     seed: Any = None,
+    plan: Optional[ExecutionPlan] = None,
 ) -> Tuple[List[Any], StealStats]:
     """Full node-local reduce-then-scan with (optional) work stealing.
 
     Phase 1: (stealing) reduction over flexible segments.
-    Phase 2: circuit scan over the T partials (paper uses dissemination —
+    Phase 2: plan-driven scan over the T partials (paper uses dissemination —
              'its implementation is simpler … difference negligible for a
-             dozen threads').
+             dozen threads').  ``plan`` overrides ``algorithm`` when given
+             (its width must equal ``num_threads``); either way the circuit
+             is lowered once and cached, not re-traced per call.
     Phase 3: per-interval sequential scan seeded with the exclusive prefix.
 
     ``seed``: optional element logically preceding items[0] (used when this
@@ -261,10 +264,11 @@ def work_stealing_scan(
     reduce_fn = stealing_reduce if stealing else static_reduce
     partials, stats = reduce_fn(op, items, num_threads)
 
-    # Phase 2: scan over partials with a prefix circuit.
-    circ = get_circuit(algorithm, len(partials))
-    scanned, _ = python_exec(op, circ, partials)
-    stats.total_ops += analyze(circ).work
+    # Phase 2: scan over partials with a precompiled circuit plan.
+    if plan is None or plan.n != len(partials):
+        plan = get_plan(algorithm, len(partials))
+    scanned, _ = exec_element(op, plan, partials)
+    stats.total_ops += plan.work()
 
     # Phase 3: seeded per-interval scans (parallel threads).
     out: List[Any] = [None] * n

@@ -1,0 +1,221 @@
+"""Pallas kernels for the engine's tile-scan backend.
+
+Two execution shapes for *low-compute* operators (add/max/logsumexp-class),
+both driven by a precompiled :class:`repro.core.engine.plan.ExecutionPlan`:
+
+1. **Fused round kernels** (``fused_round``): one kernel per plan round.  The
+   round's static gather/scatter index sets are lowered to one-hot matrices at
+   plan time, so a round executes as three MXU matmuls around one vectorized
+   operator application:
+
+       out = y * keep + SC @ op(GA @ y, GB @ y) + SM @ (GM @ y)
+
+   One-hot gathers/scatters are exact in floating point (each output row sums
+   a single non-zero term) and avoid dynamic-index loads, which Mosaic
+   restricts; ``keep`` zeroes exactly the rows the round rewrites.
+
+2. **Tile kernels** (``tile_local_scan`` / ``tile_apply``): the paper's
+   local–global–local decomposition (§4.1) with the two local phases fused
+   into one kernel launch each.  ``tile_local_scan`` computes per-tile
+   inclusive scans (``lax.associative_scan`` on the VPU) plus tile totals;
+   the tiny global phase over tile totals runs outside (the engine's vector
+   executor on the plan); ``tile_apply`` folds each tile's exclusive global
+   prefix back in with a single batched operator application.
+
+On this container's CPU the kernels run with ``interpret=True`` (the repo's
+``pallas_interpret`` idiom — see ``kernels/ops.py``); on TPU the same bodies
+compile via Mosaic.  Feature dims should be padded to the 128-lane width for
+peak MXU utilization; correctness does not depend on it.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+Op = Callable[[Any, Any], Any]
+
+
+def build_round_matrices(rnd, n: int):
+    """One-hot gather/scatter matrices + keep mask for one PlanRound.
+
+    Returns (ga, gb, sc, gm, sm, keep): combine gathers (m, n), combine
+    scatter (n, m), move gather (q, n), move scatter (n, q), keep (n, 1).
+    Combine/move groups are None when empty.
+    """
+    m = rnd.num_combines
+    q = rnd.num_moves
+    keep = np.ones((n, 1), dtype=np.float32)
+    ga = gb = sc = gm = sm = None
+    if m:
+        ga = np.zeros((m, n), dtype=np.float32)
+        gb = np.zeros((m, n), dtype=np.float32)
+        sc = np.zeros((n, m), dtype=np.float32)
+        for i, (a, b, out, _fan, _cs) in enumerate(rnd.combines):
+            ga[i, a] = 1.0
+            gb[i, b] = 1.0
+            sc[out, i] = 1.0
+            keep[out, 0] = 0.0
+    if q:
+        gm = np.zeros((q, n), dtype=np.float32)
+        sm = np.zeros((n, q), dtype=np.float32)
+        for i, (src, out, _fan) in enumerate(rnd.moves):
+            gm[i, src] = 1.0
+            sm[out, i] = 1.0
+            keep[out, 0] = 0.0
+    return ga, gb, sc, gm, sm, keep
+
+
+def _full_spec(*shape):
+    return pl.BlockSpec(shape, lambda: (0,) * len(shape))
+
+
+def fused_round(op: Op, y: jax.Array, mats, *, interpret: bool = True) -> jax.Array:
+    """Execute one plan round as a fused gather–combine–scatter kernel.
+
+    ``y``: (n, d) wire values; ``mats``: output of :func:`build_round_matrices`
+    cast to ``y.dtype``.
+    """
+    ga, gb, sc, gm, sm, keep = mats
+    has_c = ga is not None
+    has_m = gm is not None
+    if not has_c and not has_m:
+        return y
+    n, d = y.shape
+    # Accumulate at (at least) f32; never *below* the wire dtype — an f64
+    # scan must not round through f32 on every round.
+    acc_dt = jnp.promote_types(y.dtype, jnp.float32)
+
+    args = [y]
+    specs = [_full_spec(n, d)]
+    for a in (ga, gb, sc) if has_c else ():
+        args.append(a)
+        specs.append(_full_spec(*a.shape))
+    for a in (gm, sm) if has_m else ():
+        args.append(a)
+        specs.append(_full_spec(*a.shape))
+    args.append(keep)
+    specs.append(_full_spec(n, 1))
+
+    def kernel(*refs):
+        y_ref, rest, o_ref = refs[0], refs[1:-1], refs[-1]
+        i = 0
+        yv = y_ref[...]
+        keep_v = rest[-1][...]
+        acc = yv * keep_v
+        if has_c:
+            ga_v, gb_v, sc_v = (rest[i][...], rest[i + 1][...], rest[i + 2][...])
+            i += 3
+            a = jax.lax.dot_general(
+                ga_v, yv, (((1,), (0,)), ((), ())),
+                preferred_element_type=acc_dt,
+            ).astype(yv.dtype)
+            b = jax.lax.dot_general(
+                gb_v, yv, (((1,), (0,)), ((), ())),
+                preferred_element_type=acc_dt,
+            ).astype(yv.dtype)
+            r = op(a, b)
+            acc = acc + jax.lax.dot_general(
+                sc_v, r, (((1,), (0,)), ((), ())),
+                preferred_element_type=acc_dt,
+            ).astype(yv.dtype)
+        if has_m:
+            gm_v, sm_v = rest[i][...], rest[i + 1][...]
+            mv = jax.lax.dot_general(
+                gm_v, yv, (((1,), (0,)), ((), ())),
+                preferred_element_type=acc_dt,
+            ).astype(yv.dtype)
+            acc = acc + jax.lax.dot_general(
+                sm_v, mv, (((1,), (0,)), ((), ())),
+                preferred_element_type=acc_dt,
+            ).astype(yv.dtype)
+        o_ref[...] = acc
+
+    return pl.pallas_call(
+        kernel,
+        grid=(),
+        in_specs=specs,
+        out_specs=_full_spec(n, d),
+        out_shape=jax.ShapeDtypeStruct((n, d), y.dtype),
+        interpret=interpret,
+    )(*args)
+
+
+# ---------------------------------------------------------------------------
+# Tile kernels: fused local phases of the local-global-local decomposition
+# ---------------------------------------------------------------------------
+
+
+def tile_local_scan(
+    op: Op, x: jax.Array, num_tiles: int, *, interpret: bool = True
+) -> Tuple[jax.Array, jax.Array]:
+    """Per-tile inclusive scans and tile totals in one kernel launch.
+
+    ``x``: (n, d) with n divisible by ``num_tiles``.
+    Returns (local, partials): (T, K, d) per-tile inclusive scans and (T, d)
+    tile totals for the global phase.
+    """
+    n, d = x.shape
+    t = num_tiles
+    k = n // t
+    if k * t != n:
+        raise ValueError(f"n={n} not divisible by num_tiles={t}")
+    x3 = x.reshape(t, k, d)
+
+    def kernel(x_ref, y_ref, p_ref):
+        seg = x_ref[0]                                   # (K, d)
+        loc = jax.lax.associative_scan(op, seg, axis=0)
+        y_ref[0] = loc
+        p_ref[0] = loc[k - 1]
+
+    block = lambda *shape: pl.BlockSpec(
+        (1,) + shape, lambda i: (i,) + (0,) * len(shape)
+    )
+    local, partials = pl.pallas_call(
+        kernel,
+        grid=(t,),
+        in_specs=[block(k, d)],
+        out_specs=(block(k, d), block(d)),
+        out_shape=(
+            jax.ShapeDtypeStruct((t, k, d), x.dtype),
+            jax.ShapeDtypeStruct((t, d), x.dtype),
+        ),
+        interpret=interpret,
+    )(x3)
+    return local, partials
+
+
+def tile_apply(
+    op: Op, local: jax.Array, seeds: jax.Array, *, interpret: bool = True
+) -> jax.Array:
+    """Fold each tile's exclusive global prefix into its local scan.
+
+    ``local``: (T, K, d); ``seeds``: (T, d) where seeds[i] is the inclusive
+    global scan of tiles < i (seeds[0] is ignored — tile 0 passes through).
+    Returns the flat (T*K, d) inclusive scan.
+    """
+    t, k, d = local.shape
+
+    def kernel(y_ref, s_ref, o_ref):
+        i = pl.program_id(0)
+        y = y_ref[0]                                     # (K, d)
+        s = s_ref[0]                                     # (d,)
+        comb = op(jnp.broadcast_to(s[None], y.shape), y)
+        o_ref[0] = jnp.where(i == 0, y, comb)
+
+    block = lambda *shape: pl.BlockSpec(
+        (1,) + shape, lambda i: (i,) + (0,) * len(shape)
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(t,),
+        in_specs=[block(k, d), block(d)],
+        out_specs=block(k, d),
+        out_shape=jax.ShapeDtypeStruct((t, k, d), local.dtype),
+        interpret=interpret,
+    )(local, seeds)
+    return out.reshape(t * k, d)

@@ -1,0 +1,131 @@
+"""Minimal stand-in for ``hypothesis`` so property tests still run offline.
+
+The real hypothesis package is used when importable.  Otherwise this shim
+provides just the surface the test-suite needs — ``@given`` with keyword
+strategies, ``@settings(max_examples=..., deadline=...)``, and the
+``integers``/``sampled_from``/``floats`` strategies — and runs each property
+test on a deterministic pseudo-random sample of examples (seeded per test
+name, so failures reproduce).  No shrinking, no database: a lost-luggage
+parachute, not a replacement.
+
+Usage in test modules::
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:                       # offline container
+        from _hypothesis_shim import given, settings, strategies as st
+"""
+
+from __future__ import annotations
+
+import functools
+import random
+import zlib
+
+DEFAULT_MAX_EXAMPLES = 20
+
+
+class _Strategy:
+    def sample(self, rng: random.Random):
+        raise NotImplementedError
+
+
+class _Integers(_Strategy):
+    def __init__(self, min_value, max_value):
+        self.min_value = min_value
+        self.max_value = max_value
+
+    def sample(self, rng):
+        # Bias toward the boundaries like hypothesis does — edge cases first.
+        r = rng.random()
+        if r < 0.15:
+            return self.min_value
+        if r < 0.3:
+            return self.max_value
+        return rng.randint(self.min_value, self.max_value)
+
+
+class _SampledFrom(_Strategy):
+    def __init__(self, elements):
+        self.elements = list(elements)
+
+    def sample(self, rng):
+        return rng.choice(self.elements)
+
+
+class _Floats(_Strategy):
+    def __init__(self, min_value=0.0, max_value=1.0, **_):
+        self.min_value = min_value
+        self.max_value = max_value
+
+    def sample(self, rng):
+        return rng.uniform(self.min_value, self.max_value)
+
+
+class strategies:  # noqa: N801 — mirrors the hypothesis module name
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Integers(min_value, max_value)
+
+    @staticmethod
+    def sampled_from(elements):
+        return _SampledFrom(elements)
+
+    @staticmethod
+    def floats(min_value=0.0, max_value=1.0, **kw):
+        return _Floats(min_value, max_value, **kw)
+
+
+st = strategies
+
+
+def settings(*, max_examples: int = DEFAULT_MAX_EXAMPLES, **_ignored):
+    """Record max_examples on the wrapped test; other options are no-ops."""
+
+    def deco(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**strategy_kwargs):
+    """Run the test on a deterministic sample of strategy draws."""
+
+    def deco(fn):
+        inner = fn
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            # @settings may sit above @given (attribute lands on the wrapper)
+            # or below it (attribute lands on the wrapped test).
+            n = getattr(
+                wrapper,
+                "_shim_max_examples",
+                getattr(inner, "_shim_max_examples", DEFAULT_MAX_EXAMPLES),
+            )
+            seed = zlib.crc32(inner.__qualname__.encode())
+            rng = random.Random(seed)
+            for i in range(n):
+                draw = {k: s.sample(rng) for k, s in strategy_kwargs.items()}
+                try:
+                    inner(*args, **draw, **kwargs)
+                except Exception as e:
+                    raise AssertionError(
+                        f"property test failed on example {i}: {draw!r}"
+                    ) from e
+
+        # pytest must not see the strategy parameters as fixtures: hide the
+        # original signature functools.wraps exposed via __wrapped__.
+        del wrapper.__wrapped__
+        import inspect
+
+        params = [
+            p
+            for name, p in inspect.signature(inner).parameters.items()
+            if name not in strategy_kwargs
+        ]
+        wrapper.__signature__ = inspect.Signature(params)
+        return wrapper
+
+    return deco

@@ -12,6 +12,14 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SRC = os.path.join(REPO, "src")
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: long-running tests (multi-device subprocesses, big sims); "
+        "deselect with -m 'not slow'",
+    )
+
+
 def run_in_subprocess(code: str, *, devices: int = 8, timeout: int = 600):
     """Run a python snippet with N virtual host devices; returns stdout."""
     env = dict(os.environ)

@@ -4,7 +4,10 @@ import time
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline container: deterministic fallback sampler
+    from _hypothesis_shim import given, settings, strategies as st
 
 from repro.core.work_stealing import (
     rebalance_boundaries,
