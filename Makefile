@@ -3,9 +3,9 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test test-fast bench quickstart
+.PHONY: test test-fast test-slow lint bench bench-smoke ci quickstart
 
-# Tier-1: the full suite, fail-fast, exactly as CI / the roadmap runs it.
+# Tier-1: the full suite, fail-fast, exactly as the roadmap runs it.
 test:
 	$(PY) -m pytest -x -q
 
@@ -13,8 +13,26 @@ test:
 test-fast:
 	$(PY) -m pytest -x -q -m "not slow"
 
+# The slow-only job CI runs as signal (allowed to fail there).
+test-slow:
+	$(PY) -m pytest -q -m slow
+
+# Lint gate; skipped gracefully where ruff is not installed (the dev
+# container does not bake it in — CI always runs it).
+lint:
+	@if command -v ruff >/dev/null 2>&1; then ruff check .; \
+	else echo "ruff not installed; skipping lint (CI runs it)"; fi
+
 bench:
 	$(PY) benchmarks/run.py
+
+# The CI benchmark smoke job: crash gate + BENCH_ci.json artifacts.
+bench-smoke:
+	$(PY) benchmarks/bench_scan_kernels.py --smoke --json BENCH_ci.json
+	$(PY) benchmarks/bench_registration_e2e.py --smoke --json BENCH_e2e_ci.json
+
+# Everything .github/workflows/ci.yml gates on, in one local target.
+ci: lint test-fast bench-smoke
 
 quickstart:
 	$(PY) examples/quickstart.py

@@ -1,0 +1,46 @@
+"""Shared CLI + artifact writer for smoke-capable benchmark scripts.
+
+One schema for every BENCH*.json the CI bench-smoke job uploads — change it
+here and all artifacts stay comparable.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Callable, Optional
+
+
+def bench_cli(
+    benchmark: str,
+    run: Callable[..., list],
+    *,
+    extra_args: Optional[Callable[[argparse.ArgumentParser], None]] = None,
+) -> None:
+    """Parse --smoke/--json (plus ``extra_args``), run, print CSV rows, and
+    optionally write the JSON artifact.  Extra parsed options are forwarded
+    to ``run`` as keyword arguments."""
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized shapes and reps")
+    ap.add_argument("--json", default=None,
+                    help="also write rows as a JSON artifact")
+    if extra_args is not None:
+        extra_args(ap)
+    args = ap.parse_args()
+    kwargs = {k: v for k, v in vars(args).items() if k != "json"}
+    rows = run(**kwargs)
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.2f},{derived}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(
+                {"benchmark": benchmark, "smoke": args.smoke,
+                 "rows": [
+                     {"name": name, "us_per_call": us, "derived": derived}
+                     for name, us, derived in rows
+                 ]},
+                f, indent=2,
+            )
+        print(f"# wrote {args.json}")

@@ -9,7 +9,7 @@ import time
 import jax
 import numpy as np
 
-from repro.core.registration import RegistrationConfig, SeriesRegistrar, register_pair
+from repro.core.registration import RegistrationConfig, register_pair
 from repro.data.images import make_series
 
 

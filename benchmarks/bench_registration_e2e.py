@@ -1,0 +1,242 @@
+"""End-to-end registration-as-scan benchmark (paper §5, Figs. 1/9).
+
+Two parts:
+
+1. **Controlled cost profiles** — the scan operator is a rigid-transform
+   composition plus a *synthetic* per-element delay (the paper's mock
+   operators): uniform, linear ramp and single-straggler distributions over
+   a 256-frame series.  This isolates executor behaviour from minimiser
+   noise and is the acceptance gate: the hierarchical backend must beat
+   both the naive sequential loop and the best flat engine backend on the
+   single-straggler profile.  Delays sleep, so thread overlap is real even
+   on the 2-core CI runner.
+
+2. **Real registration** — ``repro.register_series`` on a synthetic
+   drifting lattice series vs the naive sequential registration loop, with
+   per-stage timings (time-to-solution, paper Fig. 1).  On a 2-core host
+   the compute-bound operator limits the achievable overlap; the controlled
+   profiles above carry the scaling story.
+
+CLI:  PYTHONPATH=src python benchmarks/bench_registration_e2e.py
+          [--smoke] [--json out.json] [--frames N]
+"""
+
+from __future__ import annotations
+
+import math
+import time
+
+
+BASE_DELAY = 0.002     # seconds per operator application (mock operator)
+# Single-straggler cost multiplier.  Capped relative to N: a straggler that
+# alone outweighs the rest of the series bounds every executor by its double
+# application in reduce-then-scan (phase 1 + phase 3), which says nothing
+# about scheduling quality.  n/5 keeps the straggler ~20% of total work.
+STRAGGLER = lambda n: min(50.0, n / 5.0)
+SEGMENTS, SEG_THREADS = 4, 2
+FLAT_THREADS = SEGMENTS * SEG_THREADS
+
+
+# --- the mock scan element: rigid transform + index pair, no JAX overhead
+# (math-module compose keeps the operator GIL-free outside the sleep).
+
+
+def _rigid_compose(a, b):
+    ang = a[0] + b[0]
+    c, s = math.cos(b[0]), math.sin(b[0])
+    return (ang, c * a[1] - s * a[2] + b[1], s * a[1] + c * a[2] + b[2])
+
+
+def _elements(n, delays=None):
+    """Mock RegElements: (transform, i, k, delay).  The delay rides on the
+    element so a combine costs the *right operand's* registration time;
+    combined partials cost the base rate (a fresh pair registration), not
+    their constituents' — indexing delays by wire position would bill the
+    straggler to every phase that touches its segment total."""
+    if delays is None:
+        delays = [0.0] * n
+    return [
+        ((0.001 * (i % 7), 0.3 * ((i % 5) - 2), 0.2 * ((i % 3) - 1)),
+         i, i + 1, delays[i])
+        for i in range(n)
+    ]
+
+
+def _delays(profile, n, base=BASE_DELAY):
+    if profile == "uniform":
+        return [base] * n
+    if profile == "ramp":
+        return [base * (0.2 + 1.6 * i / max(n - 1, 1)) for i in range(n)]
+    if profile == "straggler":
+        d = [base] * n
+        d[n // 2] = base * STRAGGLER(n)
+        return d
+    raise ValueError(profile)
+
+
+def _make_op(base=BASE_DELAY):
+    def op(a, b):
+        if b[3]:
+            time.sleep(b[3])
+        assert a[2] == b[1], "non-adjacent combine"
+        return (_rigid_compose(a[0], b[0]), a[1], b[2], base)
+
+    return op
+
+
+def _seq_scan(op, xs):
+    out = [xs[0]]
+    for x in xs[1:]:
+        out.append(op(out[-1], x))
+    return out
+
+
+def _check(ys, ref):
+    assert len(ys) == len(ref)
+    for y, r in zip(ys, ref):
+        assert y[1] == r[1] and y[2] == r[2]
+        assert all(abs(u - v) < 1e-9 for u, v in zip(y[0], r[0]))
+
+
+def _profile_rows(n):
+    """Part 1: executor comparison under controlled cost distributions."""
+    from repro.core.engine import scan as engine_scan
+
+    rows = []
+    ref = _seq_scan(_make_op(0.0), _elements(n))
+    for profile in ["uniform", "ramp", "straggler"]:
+        elems = _elements(n, _delays(profile, n))
+        op = _make_op()
+
+        t0 = time.perf_counter()
+        _check(_seq_scan(op, list(elems)), ref)
+        t_seq = time.perf_counter() - t0
+        rows.append((f"e2e_{profile}_sequential_n{n}", t_seq * 1e6, ""))
+
+        flat_times = {}
+        for alg in ["dissemination", "ladner_fischer"]:
+            t0 = time.perf_counter()
+            _check(
+                engine_scan(op, list(elems), backend="element", algorithm=alg),
+                ref,
+            )
+            flat_times[alg] = time.perf_counter() - t0
+            rows.append((f"e2e_{profile}_flat_{alg}_n{n}",
+                         flat_times[alg] * 1e6, "serial flat circuit"))
+        t_flat = min(flat_times.values())
+
+        t0 = time.perf_counter()
+        _check(
+            engine_scan(op, list(elems), backend="worksteal",
+                        num_threads=FLAT_THREADS),
+            ref,
+        )
+        t_ws = time.perf_counter() - t0
+        rows.append((f"e2e_{profile}_worksteal_t{FLAT_THREADS}_n{n}",
+                     t_ws * 1e6, "single-level stealing"))
+
+        t0 = time.perf_counter()
+        _check(
+            engine_scan(op, list(elems), backend="hierarchical",
+                        num_segments=SEGMENTS, num_threads=SEG_THREADS),
+            ref,
+        )
+        t_h = time.perf_counter() - t0
+        rows.append((
+            f"e2e_{profile}_hierarchical_s{SEGMENTS}x{SEG_THREADS}_n{n}",
+            t_h * 1e6,
+            f"speedup_vs_seq={t_seq / t_h:.2f}x;"
+            f"speedup_vs_best_flat={t_flat / t_h:.2f}x;"
+            f"beats_seq={t_h < t_seq};beats_flat={t_h < t_flat}",
+        ))
+    return rows
+
+
+def _curve_rows(n):
+    """Time-to-solution vs parallelism on the straggler profile (Fig. 9)."""
+    from repro.core.engine import scan as engine_scan
+
+    rows = []
+    elems = _elements(n, _delays("straggler", n))
+    for s, t in [(1, 1), (2, 2), (4, 2), (4, 4)]:
+        op = _make_op()
+        t0 = time.perf_counter()
+        if s * t == 1:
+            _seq_scan(op, list(elems))
+        else:
+            engine_scan(op, list(elems), backend="hierarchical",
+                        num_segments=s, num_threads=t)
+        dt = time.perf_counter() - t0
+        rows.append((f"e2e_curve_straggler_p{s * t}_n{n}", dt * 1e6,
+                     f"segments={s};threads={t}"))
+    return rows
+
+
+def _real_rows(n_frames):
+    """Part 2: the actual registration pipeline vs the sequential loop."""
+    import jax
+    import numpy as np
+
+    import repro
+    from repro.core.registration import SeriesRegistrar
+    from repro.data.images import make_series
+
+    rows = []
+    frames, true = make_series(jax.random.PRNGKey(0), n_frames,
+                               size=96, noise=0.15)
+
+    reg = SeriesRegistrar(frames)
+    t0 = time.perf_counter()
+    elems = reg.preprocess_vmapped()
+    seq = reg.sequential(list(elems))
+    t_seq = time.perf_counter() - t0
+    rows.append((f"e2e_real_sequential_f{n_frames}", t_seq * 1e6,
+                 f"op_calls={reg.op_calls}"))
+
+    res = repro.register_series(
+        frames,
+        repro.RegisterSeriesConfig(backend="hierarchical", num_segments=2,
+                                   num_threads=2,
+                                   telemetry_name="bench_e2e_real"),
+    )
+    t_pipe = sum(res.timings.values())
+    err = float(np.abs(
+        np.asarray(res.deformations["shift"])[1:]
+        - np.asarray(true["shift"][1:])
+    ).max())
+    agree = max(
+        float(np.abs(np.asarray(a.deformation["shift"])
+                     - np.asarray(b.deformation["shift"])).max())
+        for a, b in zip(seq, res.elements)
+    )
+    stages = ";".join(f"{k}={v:.3f}s" for k, v in res.timings.items())
+    rows.append((f"e2e_real_pipeline_f{n_frames}", t_pipe * 1e6,
+                 f"{stages};err_px={err:.3f};vs_seq_px={agree:.3f}"))
+    return rows
+
+
+def run(*, smoke: bool = False, frames: int | None = None):
+    n = 64 if smoke else 256
+    rows = _profile_rows(n)
+    rows += _curve_rows(n)
+    rows += _real_rows(frames if frames is not None else (8 if smoke else 16))
+    return rows
+
+
+def main():
+    try:
+        from _cli import bench_cli          # script: python benchmarks/...
+    except ImportError:
+        from ._cli import bench_cli         # package: benchmarks.run
+
+    bench_cli(
+        "registration_e2e", run,
+        extra_args=lambda ap: ap.add_argument(
+            "--frames", type=int, default=None,
+            help="frames for the real-registration section",
+        ),
+    )
+
+
+if __name__ == "__main__":
+    main()

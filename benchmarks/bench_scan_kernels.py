@@ -28,10 +28,13 @@ def _time(f, *args, reps=3):
     return (time.time() - t0) / reps
 
 
-def run():
+def run(*, smoke: bool = False):
+    """``smoke=True`` shrinks shapes/reps to CI size (~tens of seconds):
+    the rows exist to catch crashes and keep the perf trajectory files
+    populated, not to resolve small regressions on shared runners."""
     rows = []
     key = jax.random.PRNGKey(0)
-    b, h, l, dk, dv = 2, 4, 2048, 64, 64
+    b, h, l, dk, dv = 2, 4, (512 if smoke else 2048), 64, 64
     ks = jax.random.split(key, 4)
     q = jax.random.normal(ks[0], (b, h, l, dk)) * 0.3
     k = jax.random.normal(ks[1], (b, h, l, dk)) * 0.3
@@ -42,7 +45,7 @@ def run():
     t_seq = _time(seq, q, k, v, la)
     rows.append(("ssd_sequential_recurrence", t_seq * 1e6,
                  f"tok_per_s={b * l / t_seq:.0f}"))
-    for chunk in [64, 128, 256]:
+    for chunk in [64, 128] if smoke else [64, 128, 256]:
         f = jax.jit(lambda q, k, v, la, c=chunk: ops.ssd_scan(
             q, k, v, la, chunk=c, backend="xla"))
         t = _time(f, q, k, v, la)
@@ -55,16 +58,17 @@ def run():
         rows.append((f"ssd_interchunk_{alg}", t * 1e6, "chunk=128"))
     # attention: blockwise-causal vs full-mask (memory-light vs naive)
     d = 64
-    q4 = jax.random.normal(ks[0], (1, 4, 2048, d)) * 0.4
+    la_len = 512 if smoke else 2048
+    q4 = jax.random.normal(ks[0], (1, 4, la_len, d)) * 0.4
     f_block = jax.jit(lambda q, k, v: ops.attention(q, k, v, causal=True,
                                                     backend="xla"))
     t = _time(f_block, q4, q4, q4)
-    rows.append(("attention_blockwise_2k", t * 1e6, ""))
-    rows.extend(run_engine())
+    rows.append((f"attention_blockwise_l{la_len}", t * 1e6, ""))
+    rows.extend(run_engine(smoke=smoke))
     return rows
 
 
-def run_engine():
+def run_engine(*, smoke: bool = False):
     """Unified scan engine: plan-cached dispatch vs seed-style re-trace.
 
     The acceptance bar for the engine refactor: for the add-operator
@@ -74,7 +78,7 @@ def run_engine():
     """
     rows = []
     add = lambda a, b: a + b
-    n = 4096
+    n = 1024 if smoke else 4096
     x = jnp.arange(1.0, n + 1.0)
     circuit = get_circuit("ladner_fischer", n)
 
@@ -88,18 +92,38 @@ def run_engine():
         return engine_scan(add, x, backend="vector", algorithm="ladner_fischer")
 
     get_plan("ladner_fischer", n)  # warm the plan cache
-    t_seed = _time(seed_style, x, reps=5)
-    t_eng = _time(engine_cached, x, reps=5)
-    rows.append(("scan_add_seed_retrace_n4096", t_seed * 1e6, ""))
-    rows.append(("scan_add_engine_cached_n4096", t_eng * 1e6,
+    reps = 3 if smoke else 5
+    t_seed = _time(seed_style, x, reps=reps)
+    t_eng = _time(engine_cached, x, reps=reps)
+    rows.append((f"scan_add_seed_retrace_n{n}", t_seed * 1e6, ""))
+    rows.append((f"scan_add_engine_cached_n{n}", t_eng * 1e6,
                  f"speedup_vs_retrace={t_seed / t_eng:.2f}x"))
-    t_auto = _time(lambda x: engine_scan(add, x), x, reps=5)
-    rows.append(("scan_add_engine_dispatch_n4096", t_auto * 1e6,
+    t_auto = _time(lambda x: engine_scan(add, x), x, reps=reps)
+    rows.append((f"scan_add_engine_dispatch_n{n}", t_auto * 1e6,
                  "cost-model dispatch"))
     t_pl = _time(
         lambda x: engine_scan(add, x, backend="pallas", num_blocks=8),
         x, reps=3,
     )
-    rows.append(("scan_add_pallas_tiles_n4096", t_pl * 1e6,
+    rows.append((f"scan_add_pallas_tiles_n{n}", t_pl * 1e6,
                  "tile-scan kernels (interpret on CPU)"))
+    t_hier = _time(
+        lambda x: engine_scan(add, x, backend="hierarchical", num_segments=8),
+        x, reps=3,
+    )
+    rows.append((f"scan_add_hierarchical_s8_n{n}", t_hier * 1e6,
+                 "vectorized two-level reduce-then-scan"))
     return rows
+
+
+def main():
+    try:
+        from _cli import bench_cli          # script: python benchmarks/...
+    except ImportError:
+        from ._cli import bench_cli         # package: benchmarks.run
+
+    bench_cli("scan_kernels", run)
+
+
+if __name__ == "__main__":
+    main()

@@ -8,7 +8,6 @@ algorithms; speedups vs the serial scan; Eq. (5)/(6) theoretical bounds.
 
 from __future__ import annotations
 
-import numpy as np
 
 from repro.core.simulator import (
     registration_like_costs,

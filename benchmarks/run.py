@@ -15,6 +15,7 @@ from . import (
     bench_hierarchical,
     bench_microbench,
     bench_operator_cost,
+    bench_registration_e2e,
     bench_scan_kernels,
     bench_strong_scaling,
     bench_weak_scaling,
@@ -29,6 +30,7 @@ SUITES = {
     "work_energy": bench_work_energy,        # paper Table 5
     "weak_scaling": bench_weak_scaling,      # paper Fig. 10
     "operator_cost": bench_operator_cost,    # paper Fig. 5
+    "registration_e2e": bench_registration_e2e,  # paper Figs. 1/9 (real time)
     "scan_kernels": bench_scan_kernels,      # in-model scan paths (real time)
     "roofline": roofline,                    # dry-run roofline table
 }

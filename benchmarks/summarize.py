@@ -3,7 +3,6 @@ artifact JSONs.  Usage: PYTHONPATH=src python benchmarks/summarize.py"""
 
 from __future__ import annotations
 
-import glob
 import json
 import os
 

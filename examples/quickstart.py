@@ -10,7 +10,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.circuits import analyze, get_circuit
-from repro.core.deformation import compose_batched, make_deformation
+from repro.core.deformation import compose_batched
 from repro.core.engine import available_backends, cache_stats, dispatch, scan
 from repro.core.scan import blocked_scan, prefix_scan
 from repro.core.work_stealing import static_reduce, stealing_reduce

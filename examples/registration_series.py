@@ -1,7 +1,9 @@
 """The paper's application end-to-end: TEM series registration as a prefix
-scan with work stealing (paper §2.3/§3/§5 'scan' and 'full' registration).
+scan with work stealing (paper §2.3/§3/§5 'scan' and 'full' registration),
+driven through the public ``repro.register_series`` pipeline.
 
   PYTHONPATH=src python examples/registration_series.py [--frames 24]
+      [--backend hierarchical --segments 4 --threads 2] [--stream]
 """
 
 import argparse
@@ -10,61 +12,68 @@ import time
 import jax
 import numpy as np
 
+import repro
 from repro.core.registration import SeriesRegistrar
-from repro.core.work_stealing import work_stealing_scan
-from repro.data.images import make_series
+from repro.data.images import make_series, stream_series
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--frames", type=int, default=24)
-    ap.add_argument("--threads", type=int, default=4)
+    ap.add_argument("--backend", default=None,
+                    help="engine backend (default: cost-model dispatch); "
+                         "e.g. hierarchical, worksteal, element")
+    ap.add_argument("--segments", type=int, default=None)
+    ap.add_argument("--threads", type=int, default=None)
     ap.add_argument("--size", type=int, default=96)
+    ap.add_argument("--stream", action="store_true",
+                    help="feed frames through the streaming-ingest path")
     args = ap.parse_args()
 
     print(f"generating {args.frames} near-periodic frames "
           f"({args.size}x{args.size}, drifting lattice + shot noise)...")
-    frames, true = make_series(jax.random.PRNGKey(0), args.frames,
-                               size=args.size, noise=0.15)
-
-    reg = SeriesRegistrar(frames)
-    t0 = time.time()
-    elems = reg.preprocess_vmapped()          # function A, batched (parallel)
-    t_pre = time.time() - t0
-    print(f"preprocess (function A on {args.frames - 1} pairs): {t_pre:.2f}s")
+    key = jax.random.PRNGKey(0)
+    frames, true = make_series(key, args.frames, size=args.size, noise=0.15)
 
     # --- serial baseline (the paper's reference)
     reg_seq = SeriesRegistrar(frames)
     t0 = time.time()
+    elems = reg_seq.preprocess_vmapped()      # function A, batched (parallel)
     seq = reg_seq.sequential(list(elems))
     t_seq = time.time() - t0
-    print(f"sequential scan: {t_seq:.2f}s ({reg_seq.op_calls} operator calls, "
+    print(f"sequential registration loop: {t_seq:.2f}s "
+          f"({reg_seq.op_calls} operator calls, "
           f"{reg_seq.total_iters} minimiser iterations)")
 
-    # --- work-stealing scan (the paper's contribution)
-    reg_ws = SeriesRegistrar(frames)
-    t0 = time.time()
-    out, stats = work_stealing_scan(reg_ws.op, list(elems), args.threads,
-                                    stealing=True)
-    t_ws = time.time() - t0
-    print(f"work-stealing scan ({args.threads} threads): {t_ws:.2f}s "
-          f"(ops={stats.total_ops}, imbalance={stats.imbalance():.2f}, "
-          f"boundaries={stats.boundaries})")
+    # --- the pipeline: scan through the engine (hierarchical/worksteal/...)
+    cfg = repro.RegisterSeriesConfig(
+        backend=args.backend,
+        num_segments=args.segments,
+        num_threads=args.threads,
+    )
+    if args.stream:
+        src, _ = stream_series(key, args.frames, chunk_size=8,
+                               size=args.size, noise=0.15)
+    else:
+        src = frames
+    res = repro.register_series(src, cfg)
+    print(res.report())
 
-    est = np.stack([np.asarray(e.deformation["shift"]) for e in out])
+    est = np.asarray(res.deformations["shift"])[1:]
     tru = np.asarray(true["shift"][1:])
     err = np.abs(est - tru).max()
     agree = max(
         np.abs(np.asarray(a.deformation["shift"])
                - np.asarray(b.deformation["shift"])).max()
-        for a, b in zip(seq, out)
+        for a, b in zip(seq, res.elements)
     )
     print(f"max drift-recovery error vs ground truth: {err:.3f} px")
     print(f"max |scan - sequential| deformation diff: {agree:.4f} px "
           f"(equivalent minima, paper §2.3.3)")
     print(f"note: the operator is compute-bound; on one CPU the scan's extra "
           f"work costs wall-time — the win appears at P >> 1 "
-          f"(benchmarks/bench_strong_scaling.py simulates Piz Daint scale).")
+          f"(benchmarks/bench_registration_e2e.py shows it on controlled "
+          f"cost profiles; bench_strong_scaling.py simulates Piz Daint scale).")
 
 
 if __name__ == "__main__":

@@ -9,11 +9,9 @@ inside every mLSTM block: Pallas-able chunked SSD = reduce-then-scan).
 """
 
 import argparse
-import dataclasses
 
 import numpy as np
 
-from repro.configs import get_config
 from repro.launch.train import TrainConfig, train
 from repro.models.config import ArchConfig
 

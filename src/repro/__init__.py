@@ -1,0 +1,29 @@
+"""repro — work-stealing prefix scan for large-scale image registration.
+
+Reproduction of arXiv 2010.12478 grown toward a production-scale JAX/Pallas
+system.  Public surface:
+
+* :func:`register_series` — end-to-end TEM series registration through the
+  unified scan engine (``repro.pipeline``).
+* :func:`scan` — the engine's generic prefix-scan entry point
+  (``repro.core.engine``).
+
+Both are imported lazily so ``import repro`` stays dependency-light for
+tooling that only needs submodules.
+"""
+
+from typing import Any
+
+__all__ = ["RegisterSeriesConfig", "SeriesResult", "register_series", "scan"]
+
+
+def __getattr__(name: str) -> Any:
+    if name in ("register_series", "RegisterSeriesConfig", "SeriesResult"):
+        from . import pipeline
+
+        return getattr(pipeline, name)
+    if name == "scan":
+        from .core.engine import scan
+
+        return scan
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")

@@ -8,7 +8,7 @@ models that run a real forward/train step on CPU.
 from __future__ import annotations
 
 from importlib import import_module
-from typing import Dict, List
+from typing import List
 
 from repro.models.config import ArchConfig
 

@@ -24,7 +24,7 @@ we take it as an argument; ``jax.lax.axis_size`` is used when available).
 
 from __future__ import annotations
 
-from typing import Any, Callable, Optional, Sequence, Tuple
+from typing import Any, Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp

@@ -21,6 +21,7 @@ Public entry point::
     ys = scan(op, xs, algorithm="blelloch")      # pick the circuit
     ys = scan(op, xs, backend="blocked", num_blocks=8)
     ys = scan(op, items, backend="worksteal", num_threads=4)
+    ys = scan(op, items, backend="hierarchical", num_segments=4, num_threads=2)
     ys = scan(op, x, backend="collective", axis_name="x", axis_size=8)
     ys = scan(op, xs, where=[True, ...])         # masked elements = identity
 
@@ -51,13 +52,17 @@ from .cost import (
     measure_op_cost,
 )
 from .plan import ExecutionPlan, PlanRound, get_plan, lower, plan_cache
+from .telemetry import OpTelemetry, get_telemetry, op_cost_from
 
-# Registers the "pallas" backend on import.
+# Registers the "pallas" and "hierarchical" backends on import.
 from . import pallas_backend as _pallas_backend  # noqa: F401
+from . import hierarchical as _hierarchical  # noqa: F401
 
 Op = Callable[[Any, Any], Any]
 
 __all__ = [
+    "CHEAP_OP_COST",
+    "EXPENSIVE_OP_COST",
     "scan",
     "lower",
     "get_plan",
@@ -74,6 +79,9 @@ __all__ = [
     "lowered_cache",
     "cache_stats",
     "dtype_struct",
+    "OpTelemetry",
+    "get_telemetry",
+    "op_cost_from",
 ]
 
 
@@ -121,11 +129,13 @@ def scan(
     measure: bool = False,
     num_blocks: Optional[int] = None,
     num_threads: Optional[int] = None,
+    num_segments: Optional[int] = None,
     strategy: Optional[str] = None,
     axis_name: Optional[str] = None,
     axis_size: Optional[int] = None,
     stealing: bool = True,
     interpret: Optional[bool] = None,
+    use_pallas: Optional[bool] = None,
     workers: Optional[int] = None,
 ):
     """Inclusive prefix scan of ``xs`` with associative ``op``.
@@ -138,10 +148,11 @@ def scan(
     unchanged.
 
     Backend-specific options: ``num_blocks``/``strategy`` (blocked, pallas
-    tiles), ``num_threads``/``stealing`` (worksteal), ``axis_name``/
-    ``axis_size`` (collective — call inside shard_map), ``interpret``
-    (pallas).  All backends consume the same precompiled
-    :class:`ExecutionPlan`, cached across calls.
+    tiles), ``num_threads``/``stealing`` (worksteal), ``num_segments``/
+    ``num_threads``/``use_pallas`` (hierarchical — segments × threads, see
+    ``engine/hierarchical.py``), ``axis_name``/``axis_size`` (collective —
+    call inside shard_map), ``interpret`` (pallas).  All backends consume
+    the same precompiled :class:`ExecutionPlan`, cached across calls.
     """
     element_domain = isinstance(xs, list)
 
@@ -171,21 +182,29 @@ def scan(
     # --- dispatch
     if backend is None:
         cost = op_cost
+        if cost is None:
+            # Telemetry feedback: operator adapters expose a running per-call
+            # cost estimate (EMA of observed wall times) the dispatcher
+            # trusts before resorting to a fresh microbenchmark.
+            cost = op_cost_from(op)
         if cost is None and measure:
             cost = measure_op_cost(op, xs)
         d = dispatch(n, domain="element" if element_domain else "array",
                      op_cost=cost, workers=workers)
         backend = d.backend
-        if where is not None and backend in ("blocked", "worksteal"):
+        if where is not None and backend in ("blocked", "worksteal",
+                                             "hierarchical"):
             # Decomposition backends cannot honor identity masks; fall back
             # to the flat plan executors, which resolve them at plan time.
             backend = "element" if element_domain else "vector"
         algorithm = algorithm or d.algorithm
         num_blocks = num_blocks if num_blocks is not None else d.num_blocks
         num_threads = num_threads if num_threads is not None else d.num_threads
+        num_segments = (num_segments if num_segments is not None
+                        else d.num_segments)
         strategy = strategy or d.strategy
     elif where is not None and (
-        backend in ("blocked", "worksteal")
+        backend in ("blocked", "worksteal", "hierarchical")
         or (backend == "pallas" and num_blocks is not None and num_blocks > 1)
     ):
         raise NotImplementedError(
@@ -213,6 +232,28 @@ def scan(
                                          "sequential") else "dissemination"
         plan = get_plan(alg, t) if t > 1 else None
         ys, _ = fn(op, plan, xs, num_threads=t, stealing=stealing)
+        return ys
+    if backend == "hierarchical":
+        # Two-level reduce-then-scan; the plan covers the cross-segment phase.
+        from .cost import _default_workers, _largest_divisor_at_most
+
+        w = workers if workers is not None else _default_workers()
+        if element_domain:
+            s = num_segments or max(2, min(w // 2, n // 4) or 1)
+            s = max(1, min(s, n))
+            t = num_threads or max(2, w // max(s, 1))
+        else:
+            s = num_segments or _largest_divisor_at_most(n, max(2 * w, 8))
+            if n % s:
+                raise ValueError(
+                    f"num_segments={s} must divide N={n} for array inputs"
+                )
+            t = num_threads or 1
+        alg = algorithm if algorithm != "blelloch" else "ladner_fischer"
+        plan = get_plan(alg, s) if s > 1 else None
+        ys, _ = fn(op, plan, xs, num_segments=s, num_threads=t,
+                   stealing=stealing, interpret=interpret,
+                   use_pallas=use_pallas)
         return ys
     if backend == "pallas" and num_blocks is not None and num_blocks > 1:
         # Tiles mode: the plan covers the global phase over tile totals.

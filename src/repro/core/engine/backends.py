@@ -17,6 +17,9 @@ zeroing), else None.  Registered backends (see :func:`register_backend`):
              virtual time per wire (the discrete-event model of simulator.py)
   pallas     fused gather–combine–scatter tile kernels
              (registered by ``repro.core.engine.pallas_backend``)
+  hierarchical  two-level reduce-then-scan: work-stealing segment reduces,
+             plan-driven cross-segment scan, vectorized/threaded local apply
+             (registered by ``repro.core.engine.hierarchical``; paper §4.2)
 
 The registry is the extension point later scaling PRs plug into (sharded
 serving, async batching, multi-backend dispatch).
@@ -29,7 +32,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .plan import ExecutionPlan, LRUCache, PlanRound
+from .plan import ExecutionPlan, LRUCache
 
 Op = Callable[[Any, Any], Any]
 Backend = Callable[..., Tuple[Any, Any]]

@@ -43,6 +43,13 @@ EXPENSIVE_OP_COST = 5e-3
 # the local phases fuse and the crossover drops.
 BLOCKED_MIN_N = 1 << 19
 
+# Two-level hierarchical reduce-then-scan (paper §4.2): worth its extra
+# cross-segment phase once there are enough workers to populate segments ×
+# threads (the paper's nodes × cores).  Below this, flat work stealing over
+# one segment wins — one fewer scan phase, stealing across the whole range.
+HIER_MIN_WORKERS = 16
+HIER_SEGMENT_THREADS = 4  # stealing threads per segment (paper: cores/node)
+
 
 @dataclasses.dataclass(frozen=True)
 class Dispatch:
@@ -52,6 +59,7 @@ class Dispatch:
     algorithm: str
     num_blocks: Optional[int] = None
     num_threads: Optional[int] = None
+    num_segments: Optional[int] = None
     strategy: str = "reduce_then_scan"
     reason: str = ""
 
@@ -118,17 +126,37 @@ def dispatch(
     cost = op_cost if op_cost is not None else 0.0
 
     if domain == "element":
-        if cost >= EXPENSIVE_OP_COST and w > 1 and n >= 2 * w:
+        if cost >= EXPENSIVE_OP_COST and w >= HIER_MIN_WORKERS and n >= 2 * w:
+            # Paper §4.2: at nodes × cores scale, two-level reduce-then-scan —
+            # stealing within segments, a tiny cross-segment scan between.
+            s = max(2, w // HIER_SEGMENT_THREADS)
+            return Dispatch(
+                "hierarchical", "ladner_fischer",
+                num_segments=s, num_threads=max(2, w // s),
+                strategy="reduce_then_scan",
+                reason=f"expensive op ({cost:.2e}s), {w} workers -> "
+                       "hierarchical stealing reduce-then-scan",
+            )
+        if cost >= EXPENSIVE_OP_COST and w > 1:
             # Paper §4.3: op cost dominates -> reduce-then-scan (work ~2N)
             # with Algorithm-1 stealing over the flexible phase-1 segments.
-            return Dispatch(
-                "worksteal", "dissemination", num_threads=w,
-                strategy="reduce_then_scan",
-                reason=f"expensive op ({cost:.2e}s) -> stealing reduce-then-scan",
-            )
+            # Threads clamp to n//2 (each needs >= 2 elements), so a short
+            # series on a many-core host still parallelizes instead of
+            # falling through to the serial executor.
+            t = min(w, n // 2)
+            if t > 1:
+                return Dispatch(
+                    "worksteal", "dissemination", num_threads=t,
+                    strategy="reduce_then_scan",
+                    reason=f"expensive op ({cost:.2e}s) -> "
+                           "stealing reduce-then-scan",
+                )
+        # The element executor is a serial Python loop: depth-optimal
+        # circuits only multiply the operator applications (~4x at N=32),
+        # so the fallback is the work-optimal sequential chain.
         return Dispatch(
-            "element", "ladner_fischer",
-            reason="per-element op; circuit depth dominates",
+            "element", "sequential",
+            reason="serial per-element execution; work-optimal chain",
         )
 
     # Array domain.

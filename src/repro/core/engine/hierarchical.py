@@ -1,0 +1,320 @@
+"""Hierarchical two-level reduce-then-scan backend (paper §4.2/§4.3).
+
+The paper's headline configuration: N elements are split across S node-local
+*segments*; each segment is reduced independently with the work-stealing
+executor (Algorithm 1 — threads steal boundary elements from slower
+neighbours), a *small* cross-segment scan runs over the S segment totals
+through an existing flat backend (plan-driven, width S), and a final
+local-apply pass folds each segment's exclusive prefix back into its
+elements.  Work stays ~3N while the critical path collapses to
+O(N/(S·T) + log S).
+
+Two domains, same phase structure:
+
+* **element** (Python list, expensive opaque operator — the registration
+  operator): phase 1 runs ``work_stealing.stealing_reduce`` per segment, all
+  segments concurrently; phase 3 runs seeded sequential applies, one thread
+  per stolen interval.  This is the host-level twin of the paper's
+  MPI-nodes × OpenMP-threads deployment.
+* **array** (pytree of arrays, vectorizable operator): phase 1/3 are
+  vectorized segment scans/applies (``vmap`` + broadcast combine), routed
+  through the fused Pallas tile kernels (``kernels/tile_scan.py``) when the
+  input is a single float leaf — eligible exactly where the ``pallas`` tiles
+  backend is.
+
+``last_stats`` (a :class:`HierStats`) records per-phase wall time, segment
+boundaries and per-segment steal statistics for the most recent element
+execution — consumed by ``benchmarks/bench_registration_e2e.py`` and the
+pipeline's stage report.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from .backends import exec_element, exec_vector, register_backend
+from .plan import ExecutionPlan, get_plan
+
+Op = Callable[[Any, Any], Any]
+
+
+@dataclasses.dataclass
+class HierStats:
+    """Telemetry of one hierarchical element-domain execution."""
+
+    num_segments: int
+    threads_per_segment: int
+    segment_bounds: List[Tuple[int, int]]       # inclusive [lo, hi] per segment
+    intervals: List[Tuple[int, int]]            # final per-thread intervals
+    steal_stats: List[Any]                      # per-segment StealStats | None
+    phase_seconds: Dict[str, float]
+    total_ops: int
+
+    def imbalance(self) -> float:
+        """Max relative busy-time imbalance across segments (paper Fig. 5b)."""
+        vals = [s.imbalance() for s in self.steal_stats if s is not None]
+        return max(vals) if vals else 0.0
+
+
+#: Stats of the most recent element-domain hierarchical execution.
+last_stats: Optional[HierStats] = None
+
+
+def segment_bounds(n: int, s: int) -> List[Tuple[int, int]]:
+    """Contiguous near-even split of [0, n) into s inclusive intervals."""
+    base, extra = divmod(n, s)
+    out = []
+    lo = 0
+    for i in range(s):
+        hi = lo + base + (1 if i < extra else 0) - 1
+        out.append((lo, hi))
+        lo = hi + 1
+    return out
+
+
+# ---------------------------------------------------------------------------
+# element domain — segments reduced by the work-stealing executor
+# ---------------------------------------------------------------------------
+
+
+def _exec_hier_element(
+    op: Op,
+    plan: Optional[ExecutionPlan],
+    xs: Sequence[Any],
+    *,
+    num_segments: int,
+    num_threads: int,
+    stealing: bool,
+    seed: Any,
+) -> Tuple[list, Any]:
+    from ..work_stealing import static_reduce, stealing_reduce
+
+    global last_stats
+    n = len(xs)
+    s = max(1, min(num_segments, n))
+    t = max(1, num_threads)
+    bounds = segment_bounds(n, s)
+    phase: Dict[str, float] = {}
+    ops_count = 0
+
+    # --- phase 1: per-segment (stealing) reduction, segments concurrent.
+    def reduce_segment(lo: int, hi: int):
+        seg = list(xs[lo : hi + 1])
+        ln = hi - lo + 1
+        t_eff = min(t, ln // 2)
+        if t_eff >= 2:
+            fn = stealing_reduce if stealing else static_reduce
+            partials, st = fn(op, seg, t_eff)
+            intervals = [(lo + a, lo + b) for a, b in st.boundaries]
+            reduce_ops = st.total_ops
+        else:
+            acc = seg[0]
+            for item in seg[1:]:
+                acc = op(acc, item)
+            partials, st, intervals = [acc], None, [(lo, hi)]
+            reduce_ops = ln - 1
+        # Inclusive scan over the thread partials (T is small) — its last
+        # entry is the segment total for the global phase, its prefixes seed
+        # the per-interval applies in phase 3.
+        pscan = [partials[0]]
+        for p in partials[1:]:
+            pscan.append(op(pscan[-1], p))
+        return pscan, intervals, st, reduce_ops + len(pscan) - 1
+
+    t0 = time.perf_counter()
+    if s == 1:
+        seg_results = [reduce_segment(*bounds[0])]
+    else:
+        with ThreadPoolExecutor(max_workers=s) as pool:
+            seg_results = list(pool.map(lambda b: reduce_segment(*b), bounds))
+    phase["reduce"] = time.perf_counter() - t0
+    for _pscan, _intervals, _st, seg_ops in seg_results:
+        ops_count += seg_ops
+
+    # --- phase 2: small cross-segment scan over the S totals.
+    t0 = time.perf_counter()
+    totals = [r[0][-1] for r in seg_results]
+    if s > 1:
+        if plan is None or plan.n != s or plan.exclusive:
+            plan = get_plan("ladner_fischer", s)
+        scanned, _ = exec_element(op, plan, totals)
+        ops_count += plan.work()
+    else:
+        scanned = totals
+    total = scanned[-1]
+    phase["global"] = time.perf_counter() - t0
+
+    # --- phase 3: seeded per-interval applies, all intervals concurrent.
+    t0 = time.perf_counter()
+    out: List[Any] = [None] * n
+    jobs: List[Tuple[int, int, Any]] = []
+    for i, (pscan, intervals, _st, _ops) in enumerate(seg_results):
+        base = seed if i == 0 else (
+            scanned[i - 1] if seed is None else op(seed, scanned[i - 1])
+        )
+        for j, (lo, hi) in enumerate(intervals):
+            if j == 0:
+                sj = base
+            else:
+                sj = pscan[j - 1] if base is None else op(base, pscan[j - 1])
+                ops_count += 0 if base is None else 1
+            jobs.append((lo, hi, sj))
+
+    def apply_interval(job):
+        lo, hi, acc = job
+        k = 0
+        for idx in range(lo, hi + 1):
+            acc = xs[idx] if acc is None else op(acc, xs[idx])
+            out[idx] = acc
+            k += 1
+        return k - (1 if job[2] is None else 0)
+
+    if len(jobs) == 1:
+        ops_count += apply_interval(jobs[0])
+    else:
+        with ThreadPoolExecutor(max_workers=len(jobs)) as pool:
+            ops_count += sum(pool.map(apply_interval, jobs))
+    phase["apply"] = time.perf_counter() - t0
+
+    last_stats = HierStats(
+        num_segments=s,
+        threads_per_segment=t,
+        segment_bounds=bounds,
+        intervals=[(lo, hi) for lo, hi, _ in jobs],
+        steal_stats=[r[2] for r in seg_results],
+        phase_seconds=phase,
+        total_ops=ops_count,
+    )
+    return out, total
+
+
+# ---------------------------------------------------------------------------
+# array domain — vectorized segment scans + broadcast apply (Pallas-eligible)
+# ---------------------------------------------------------------------------
+
+
+def _pallas_eligible(xs) -> bool:
+    import jax
+    import jax.numpy as jnp
+
+    leaves = jax.tree.leaves(xs)
+    return len(leaves) == 1 and jnp.issubdtype(leaves[0].dtype, jnp.floating)
+
+
+def _exec_hier_array(
+    op: Op,
+    plan: Optional[ExecutionPlan],
+    xs,
+    *,
+    num_segments: int,
+    interpret: Optional[bool],
+    use_pallas: Optional[bool],
+) -> Tuple[Any, Any]:
+    import jax
+    import jax.numpy as jnp
+
+    from ..scan import _local_inclusive_scan
+
+    n = jax.tree.leaves(xs)[0].shape[0]
+    s = num_segments
+    if n % s:
+        raise ValueError(
+            f"hierarchical array scan needs N divisible by num_segments, "
+            f"got N={n}, S={s}"
+        )
+    if plan is None or plan.n != s or plan.exclusive:
+        plan = get_plan("ladner_fischer", s) if s > 1 else None
+    if s == 1:
+        ys = _local_inclusive_scan(op, xs)
+        return ys, jax.tree.map(lambda t: t[-1], ys)
+
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if use_pallas and _pallas_eligible(xs):
+        # Tile-local fused kernels: per-tile scan + seed apply (tiles mode).
+        from repro.kernels.tile_scan import tile_apply, tile_local_scan
+
+        leaf = jax.tree.leaves(xs)[0]
+        tail = leaf.shape[1:]
+        x2 = leaf.reshape(n, -1)
+        itp = interpret if interpret is not None else (
+            jax.default_backend() != "tpu"
+        )
+        local, partials = tile_local_scan(op, x2, s, interpret=itp)
+        gscan, _ = exec_vector(op, plan, partials)
+        seeds = jnp.concatenate([partials[:1], gscan[:-1]], axis=0)
+        out2 = tile_apply(op, local, seeds, interpret=itp)
+        ys = out2.reshape((n,) + tail)
+        total = gscan[-1].reshape(tail)
+        return jax.tree.unflatten(jax.tree.structure(xs), [ys]), total
+
+    k = n // s
+    segs = jax.tree.map(lambda t: t.reshape((s, k) + t.shape[1:]), xs)
+    local = jax.vmap(lambda seg: _local_inclusive_scan(op, seg))(segs)
+    partials = jax.tree.map(lambda t: t[:, -1], local)
+    gscan, _ = exec_vector(op, plan, partials)
+    # Apply: segment i>0 folds in the inclusive global prefix of segments <i.
+    excl = jax.tree.map(lambda t: t[:-1], gscan)
+    head = jax.tree.map(lambda t: t[:1], local)
+    rest = jax.tree.map(lambda t: t[1:], local)
+    upd = jax.vmap(
+        lambda e, seg: op(
+            jax.tree.map(
+                lambda t: jnp.broadcast_to(t[None], (k,) + t.shape), e
+            ),
+            seg,
+        )
+    )(excl, rest)
+    out = jax.tree.map(lambda h, u: jnp.concatenate([h, u], 0), head, upd)
+    ys = jax.tree.map(lambda t: t.reshape((n,) + t.shape[2:]), out)
+    return ys, jax.tree.map(lambda t: t[-1], gscan)
+
+
+# ---------------------------------------------------------------------------
+# backend entry point
+# ---------------------------------------------------------------------------
+
+
+def exec_hierarchical(
+    op: Op,
+    plan: Optional[ExecutionPlan],
+    xs,
+    *,
+    num_segments: Optional[int] = None,
+    num_threads: Optional[int] = None,
+    stealing: bool = True,
+    seed: Any = None,
+    interpret: Optional[bool] = None,
+    use_pallas: Optional[bool] = None,
+    **_,
+) -> Tuple[Any, Any]:
+    """Two-level reduce-then-scan; ``plan`` covers the cross-segment phase.
+
+    ``num_segments`` defaults to the plan width; ``num_threads`` is the
+    work-stealing thread count *per segment* (element domain only).
+    """
+    s = num_segments if num_segments is not None else (plan.n if plan else 1)
+    if isinstance(xs, list):
+        return _exec_hier_element(
+            op,
+            plan,
+            xs,
+            num_segments=s,
+            num_threads=num_threads if num_threads is not None else 2,
+            stealing=stealing,
+            seed=seed,
+        )
+    if seed is not None:
+        raise NotImplementedError(
+            "seeded hierarchical scan is element-domain only"
+        )
+    return _exec_hier_array(
+        op, plan, xs, num_segments=s, interpret=interpret,
+        use_pallas=use_pallas,
+    )
+
+
+register_backend("hierarchical", exec_hierarchical)

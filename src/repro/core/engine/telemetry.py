@@ -1,0 +1,109 @@
+"""Per-operator cost telemetry feeding the dispatcher (paper §4, Table 3).
+
+The dispatcher's decision procedure needs an operator-cost estimate.  A user
+hint (``op_cost=``) or a one-off microbenchmark (``measure=True``) works for
+stationary operators, but the registration operator's cost is *data
+dependent* (iteration counts vary per frame pair, §2.3.3) and drifts over a
+series.  ``OpTelemetry`` closes the loop: operator adapters record every
+application's wall time, and the engine consults the adapter's running
+estimate on the next ``scan`` call (``scan`` looks for an
+``op_cost_estimate`` attribute on the operator when no explicit hint is
+given).
+
+The estimate is an exponential moving average, so a straggler-heavy stretch
+raises the estimate quickly while one outlier does not pin it forever.
+Thread-safe: the work-stealing executors apply the operator from many
+threads concurrently.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Dict, Optional
+
+
+@dataclasses.dataclass
+class OpTelemetry:
+    """Running per-call cost statistics for one operator."""
+
+    name: str = "op"
+    ema_alpha: float = 0.2
+
+    calls: int = 0
+    total_time: float = 0.0
+    max_time: float = 0.0
+    min_time: float = float("inf")
+    ema_time: Optional[float] = None
+
+    def __post_init__(self):
+        self._lock = threading.Lock()
+
+    def record(self, seconds: float) -> None:
+        with self._lock:
+            self.calls += 1
+            self.total_time += seconds
+            self.max_time = max(self.max_time, seconds)
+            self.min_time = min(self.min_time, seconds)
+            self.ema_time = (
+                seconds
+                if self.ema_time is None
+                else (1 - self.ema_alpha) * self.ema_time + self.ema_alpha * seconds
+            )
+
+    def mean(self) -> float:
+        return self.total_time / self.calls if self.calls else 0.0
+
+    def estimate(self) -> Optional[float]:
+        """Seconds/application for the dispatcher; None before any call."""
+        return self.ema_time
+
+    def imbalance(self) -> float:
+        """max/mean per-call cost ratio — the paper's imbalance signal."""
+        m = self.mean()
+        return self.max_time / m if m > 0 else 1.0
+
+    def reset(self) -> None:
+        with self._lock:
+            self.calls = 0
+            self.total_time = 0.0
+            self.max_time = 0.0
+            self.min_time = float("inf")
+            self.ema_time = None
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "calls": self.calls,
+            "total_s": self.total_time,
+            "mean_s": self.mean(),
+            "max_s": self.max_time if self.calls else 0.0,
+            "ema_s": self.ema_time if self.ema_time is not None else 0.0,
+            "imbalance": self.imbalance(),
+        }
+
+
+_registry: Dict[str, OpTelemetry] = {}
+_registry_lock = threading.Lock()
+
+
+def get_telemetry(name: str) -> OpTelemetry:
+    """Process-wide named telemetry channel (benchmarks read these back)."""
+    with _registry_lock:
+        tel = _registry.get(name)
+        if tel is None:
+            tel = _registry[name] = OpTelemetry(name=name)
+        return tel
+
+
+def op_cost_from(op) -> Optional[float]:
+    """Extract a telemetry-fed cost estimate from an operator, if it has one.
+
+    Adapters expose ``op_cost_estimate`` as a float or a zero-arg callable
+    returning a float (None when nothing has been observed yet).
+    """
+    est = getattr(op, "op_cost_estimate", None)
+    if est is None:
+        return None
+    if callable(est):
+        est = est()
+    return float(est) if est is not None else None

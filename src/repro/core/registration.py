@@ -18,6 +18,7 @@ in for the parallel filesystem).
 from __future__ import annotations
 
 import dataclasses
+import threading
 from functools import partial
 from typing import NamedTuple, Optional, Tuple
 
@@ -194,3 +195,133 @@ class SeriesRegistrar:
         for e in elems[1:]:
             out.append(self.op(out[-1], e))
         return out
+
+
+# ---------------------------------------------------------------------------
+# Engine adapter: Function B as a telemetered scan operator
+# ---------------------------------------------------------------------------
+
+
+def fused_ncc_distance(
+    ref: jax.Array,
+    tmpl: jax.Array,
+    d: Deformation,
+    *,
+    tile: int = 32,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """1 - NCC(ref, tmpl o d) through the fused warp+NCC Pallas kernel.
+
+    One pass over output tiles computes the warp and the five NCC partial
+    sums (``kernels/warp_ncc.py``) — the warped image never round-trips
+    through HBM.  Equivalent to :func:`~repro.core.deformation.ncc_distance`
+    up to fp accumulation order.
+    """
+    from repro.kernels.warp_ncc import warp_ncc
+
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    _, corr = warp_ncc(
+        tmpl, ref, d["angle"], d["shift"], tile=tile, interpret=interpret
+    )
+    return 1.0 - corr
+
+
+def fused_ncc_eligible(shape: Tuple[int, int], tile: int = 32) -> bool:
+    """The warp_ncc kernel tiles the output: both dims must divide by tile."""
+    h, w = shape
+    return h % tile == 0 and w % tile == 0
+
+
+class RegistrationOperator:
+    """Engine-facing adapter around Function B (the scan operator ``(.)_B``).
+
+    Lets ``repro.core.engine.scan`` treat series registration as any other
+    element-domain scan while closing two loops the raw method can't:
+
+    * **cost telemetry** — every application's wall time is recorded into an
+      :class:`~repro.core.engine.telemetry.OpTelemetry`; the adapter exposes
+      ``op_cost_estimate`` so the dispatcher routes the *next* call from
+      observed costs (data-dependent iteration counts drift over a series).
+    * **fused guess check** — when ``skip_tol`` is set, the composed initial
+      guess phi_{j,k} o phi_{i,j} is scored first and refinement is skipped
+      when it already registers within tolerance.  The warp+NCC evaluation
+      is the hot path; it routes through the fused Pallas kernel
+      (``kernels/warp_ncc.py``) where eligible (tile-divisible frames;
+      on-TPU by default, ``fused=True`` forces interpret mode elsewhere).
+
+    Thread-safe — the work-stealing executors apply it concurrently.
+    """
+
+    def __init__(
+        self,
+        registrar: SeriesRegistrar,
+        *,
+        name: str = "registration_B",
+        telemetry=None,
+        skip_tol: Optional[float] = None,
+        fused: Optional[bool] = None,
+        tile: int = 32,
+    ):
+        from .engine.telemetry import OpTelemetry
+
+        self.registrar = registrar
+        # A fresh channel per adapter by default, so per-run statistics stay
+        # per-run; pass get_telemetry(name) explicitly to accumulate across
+        # runs under one process-wide channel.
+        self.telemetry = (
+            telemetry if telemetry is not None else OpTelemetry(name=name)
+        )
+        self.skip_tol = skip_tol
+        self.tile = tile
+        h, w = registrar.frames.shape[1:]
+        if fused is None:
+            fused = (
+                jax.default_backend() == "tpu"
+                and fused_ncc_eligible((h, w), tile)
+            )
+        self.fused = fused and fused_ncc_eligible((h, w), tile)
+        self.skipped = 0
+        self.refined = 0
+        self._count_lock = threading.Lock()
+
+    # -- the dispatcher feedback hook (read by engine.scan via telemetry).
+    @property
+    def op_cost_estimate(self) -> Optional[float]:
+        return self.telemetry.estimate()
+
+    def prime(self, seconds_per_call: float) -> None:
+        """Seed the cost estimate before the first application (e.g. from
+        the function-A preprocessing stage, whose per-pair cost is the same
+        minimiser on the same frames)."""
+        self.telemetry.record(seconds_per_call)
+
+    def _guess_distance(self, ref, tmpl, guess):
+        if self.fused:
+            return fused_ncc_distance(ref, tmpl, guess, tile=self.tile)
+        return ncc_distance(ref, tmpl, guess)
+
+    def __call__(self, a: RegElement, b: RegElement) -> RegElement:
+        import time
+
+        t0 = time.perf_counter()
+        try:
+            reg = self.registrar
+            assert a.k == b.i, f"non-adjacent elements {a.i, a.k} . {b.i, b.k}"
+            guess = compose(a.deformation, b.deformation)
+            if not reg.refine:
+                return RegElement(guess, a.i, b.k)
+            if self.skip_tol is not None:
+                dist = self._guess_distance(
+                    reg.frames[a.i], reg.frames[b.k], guess
+                )
+                if float(dist) < self.skip_tol:
+                    with self._count_lock:
+                        self.skipped += 1
+                    return RegElement(guess, a.i, b.k)
+            res = register_pair(reg.frames[a.i], reg.frames[b.k], guess, reg.cfg)
+            with self._count_lock:
+                self.refined += 1
+            return RegElement(res.deformation, a.i, b.k)
+        finally:
+            self.telemetry.record(time.perf_counter() - t0)

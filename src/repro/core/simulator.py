@@ -23,11 +23,11 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import math
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import List, Optional, Tuple
 
 import numpy as np
 
-from .circuits import Circuit, analyze, get_circuit
+from .circuits import Circuit, get_circuit
 from .engine.plan import get_plan
 
 

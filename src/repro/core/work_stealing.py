@@ -95,6 +95,26 @@ class StealStats:
         return (max(busy) - mean) / mean if mean > 0 else 0.0
 
 
+def _steal_direction(
+    rate_left: float, rate_right: float, gap_left: int, gap_right: int
+) -> str:
+    """Pick the side to extend toward (Algorithm 1's greedy choice).
+
+    With both neighbour rates observed, move toward the *slower* neighbour
+    (higher sec/op).  Before either neighbour has completed an operator
+    application both rates read 0.0 — indistinguishable — so the tie-break
+    is the *larger gap*: it holds more unclaimed work, and extending into it
+    relieves whichever neighbour turns out to be slower.
+    """
+    if gap_left <= 0:
+        return "R"
+    if gap_right <= 0:
+        return "L"
+    if rate_left == 0.0 and rate_right == 0.0:
+        return "L" if gap_left > gap_right else "R"
+    return "L" if rate_left > rate_right else "R"
+
+
 def _start_positions(n: int, t: int) -> List[int]:
     """Thread start elements: 0, segment middles, N-1 (paper §4.3)."""
     if t == 1:
@@ -147,11 +167,13 @@ def stealing_reduce(
             rs = right.size() if right else 0
             if ls == 0 and rs == 0:
                 break
-            if ls > 0 and rs > 0:
-                # Greedy: move toward the *slower* neighbour (higher sec/op).
-                d = "L" if stats[tid - 1].rate() > stats[tid + 1].rate() else "R"
-            else:
-                d = "L" if ls > 0 else "R"
+            # Greedy: move toward the *slower* neighbour (higher sec/op);
+            # unobserved rates tie-break on the larger gap.
+            d = _steal_direction(
+                stats[tid - 1].rate() if left else 0.0,
+                stats[tid + 1].rate() if right else 0.0,
+                ls, rs,
+            )
             if d == "L":
                 idx = left.take_right()
                 if idx is None:

@@ -12,7 +12,7 @@ registration problem hard and the scan operator imbalanced:
 
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Iterator, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -64,6 +64,38 @@ def make_series(
     frames[i] is the base lattice observed after cumulative drift d_i, i.e.
     f_i o phi_{0,i} ~= f_0 with phi_{0,i} = translation(d_i) (+ tiny rotation).
     Per-step drift magnitude stays < period/2 (paper's §2.3.2 assumption).
+    One batched render — the single-chunk case of :func:`stream_series`.
+    """
+    chunks, true = stream_series(
+        key, n_frames, chunk_size=n_frames, size=size, period=period,
+        drift_step=drift_step, rotation_step=rotation_step, noise=noise,
+    )
+    return next(chunks), true
+
+
+def stream_series(
+    key: jax.Array,
+    n_frames: int,
+    *,
+    chunk_size: int = 32,
+    size: int = 96,
+    period: float = 12.0,
+    drift_step: float | None = None,
+    rotation_step: float = 0.002,
+    noise: float = 0.25,
+) -> Tuple[Iterator[jax.Array], Deformation]:
+    """Streaming twin of :func:`make_series`: frames arrive in acquisition
+    order as ``(chunk,)`` batches of at most ``chunk_size``.
+
+    Stands in for the paper's parallel-filesystem ingest: the drift
+    trajectory is fixed up front (it is metadata-sized), but frames are
+    *rendered* lazily per chunk, so a consumer — ``repro.register_series`` —
+    can overlap function-A preprocessing with acquisition instead of waiting
+    for the full series.  ``make_series`` is the single-chunk special case,
+    so both produce identical frames for the same arguments.
+
+    Returns ``(chunks, true)``: the chunk iterator and the ground-truth
+    cumulative deformations (for evaluation only — not consumed upstream).
     """
     if drift_step is None:
         drift_step = period * 0.35
@@ -79,6 +111,7 @@ def make_series(
     rots = rots.at[0].set(0.0)
     cum_shift = jnp.cumsum(steps, axis=0)
     cum_rot = jnp.cumsum(rots)
+    nkeys = jax.random.split(kn, n_frames)
 
     def render(shift, rot, nkey):
         # f_i(x) = f_0(phi^{-1}(x)) so that f_i(phi(x)) = f_0(x):
@@ -87,7 +120,12 @@ def make_series(
         frame = warp(base, inv)
         return frame + noise * jax.random.normal(nkey, frame.shape)
 
-    nkeys = jax.random.split(kn, n_frames)
-    frames = jax.vmap(render)(cum_shift, cum_rot, nkeys)
+    render_chunk = jax.vmap(render)
+
+    def chunks() -> Iterator[jax.Array]:
+        for lo in range(0, n_frames, chunk_size):
+            hi = min(lo + chunk_size, n_frames)
+            yield render_chunk(cum_shift[lo:hi], cum_rot[lo:hi], nkeys[lo:hi])
+
     true = {"angle": cum_rot, "shift": cum_shift}
-    return frames, true
+    return chunks(), true

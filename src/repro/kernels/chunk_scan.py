@@ -23,7 +23,6 @@ Accumulation is fp32 via ``preferred_element_type``.
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -20,7 +20,6 @@ Backends:
 
 from __future__ import annotations
 
-from functools import partial
 from typing import Optional, Sequence
 
 import jax
@@ -30,7 +29,6 @@ from repro.core.distributed import hierarchical_collective_scan
 from repro.core.scan import prefix_scan
 
 from . import chunk_scan as _cs
-from . import ref as _ref
 from .flash_attention import flash_attention as _flash
 
 
@@ -117,7 +115,7 @@ def ssd_scan(
             _state_op, last, axis_names, axis_sizes=axis_sizes
         )
         # exclusive across devices:
-        from repro.core.distributed import exclusive_shift, _nonzero_linear_index, _exclusive_over_hierarchy
+        from repro.core.distributed import _nonzero_linear_index, _exclusive_over_hierarchy
 
         prev = _exclusive_over_hierarchy(g, axis_names, axis_sizes)
         has_prev = _nonzero_linear_index(axis_names)

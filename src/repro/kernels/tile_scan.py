@@ -30,7 +30,7 @@ peak MXU utilization; correctness does not depend on it.
 
 from __future__ import annotations
 
-from typing import Any, Callable, Optional, Tuple
+from typing import Any, Callable, Tuple
 
 import jax
 import jax.numpy as jnp

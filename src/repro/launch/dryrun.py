@@ -34,9 +34,8 @@ import traceback
 from typing import Dict, Optional
 
 import jax
-import numpy as np
 
-from repro.configs import get_config, list_archs
+from repro.configs import get_config
 from repro.launch import sharding as shd
 from repro.launch import steps
 from repro.launch.mesh import make_production_mesh
@@ -362,7 +361,6 @@ def _save_cell(cell: Dict) -> None:
              f"{cell['mesh'].replace('x', '_')}.json")
     with open(os.path.join(ARTIFACT_DIR, fname), "w") as f:
         json.dump(cell, f, indent=2)
-
 
 
 def main():

@@ -21,7 +21,6 @@ import numpy as np
 
 from repro.configs import get_config, get_smoke_config
 from repro.models import lm
-from repro.models.config import ArchConfig
 
 from . import steps
 

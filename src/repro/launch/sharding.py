@@ -13,7 +13,6 @@ Policy (DESIGN.md §6):
 
 from __future__ import annotations
 
-from typing import Any, Optional, Tuple
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
@@ -33,7 +32,6 @@ def _div(n: int, axes, mesh) -> bool:
 
 def _spec_for(path_keys, shape, mesh) -> P:
     dp = dp_axes(mesh)
-    tp = tp_axis(mesh)
     keys = [str(k) for k in path_keys]
     stacked = "blocks" in keys or "encoder" in keys
     name_chain = keys

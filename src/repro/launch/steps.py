@@ -8,7 +8,7 @@ exactly what the multi-pod dry-run lowers against.
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -14,7 +14,6 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import os
 import time
 from typing import Any, Dict, NamedTuple, Optional
 
@@ -26,7 +25,6 @@ from repro.checkpoint.checkpointer import Checkpointer
 from repro.configs import get_config, get_smoke_config
 from repro.data.pipeline import PipelineConfig, TokenPipeline
 from repro.models import lm
-from repro.models.config import ArchConfig
 from repro.models.shardctx import activation_sharding
 from repro.optim import adamw
 from repro.runtime.fault import FailureInjector, run_with_restarts

@@ -3,7 +3,6 @@
 from __future__ import annotations
 
 import math
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -128,7 +127,6 @@ def head_init(key, d: int, vocab: int, n_chunks: int, dtype):
 
 def head_logits(p, x, softcap: float = 0.0):
     """Materialized logits (tests / decode / small models)."""
-    nc = p["w"].shape[0]
     logits = jnp.einsum("bld,cdv->blcv", x, p["w"])
     logits = logits.reshape(*x.shape[:-1], -1).astype(jnp.float32)
     if softcap:

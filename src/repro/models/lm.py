@@ -13,7 +13,7 @@ Multimodal frontends are stubs per the assignment: ``batch["frames"]`` /
 
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -23,15 +23,12 @@ from . import shardctx
 from .config import ArchConfig
 from .layers import (
     chunked_cross_entropy,
-    dense,
-    dense_init,
     embed,
     embed_init,
     head_init,
     head_logits,
     rmsnorm,
     rmsnorm_init,
-    softmax_cross_entropy,
 )
 
 AUX_WEIGHT = 0.01

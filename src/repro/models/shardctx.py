@@ -12,7 +12,6 @@ from __future__ import annotations
 
 import contextlib
 import threading
-from typing import Optional, Tuple
 
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P

@@ -18,7 +18,6 @@ uses n_groups=1 (B/C shared across heads).
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

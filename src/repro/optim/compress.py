@@ -9,7 +9,7 @@ reduction on the slow inter-pod axis is the headline win.
 
 from __future__ import annotations
 
-from typing import Any, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -11,7 +11,7 @@ resulting configuration.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional, Sequence, Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax
 import numpy as np

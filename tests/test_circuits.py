@@ -3,23 +3,16 @@
 import math
 import operator
 
-import pytest
 try:
     from hypothesis import given, settings, strategies as st
 except ImportError:  # offline container: deterministic fallback sampler
     from _hypothesis_shim import given, settings, strategies as st
 
 from repro.core.circuits import (
-    CircuitStats,
     analyze,
     blelloch_circuit,
-    brent_kung_circuit,
-    dissemination_circuit,
     get_circuit,
     ladner_fischer_circuit,
-    sequential_circuit,
-    sklansky_circuit,
-    table1_bounds,
 )
 from repro.core.scan import python_exec
 

@@ -1,0 +1,225 @@
+"""Hierarchical two-level backend: oracle equivalence under imbalanced
+operator-cost profiles, telemetry-fed dispatch, and the register_series
+pipeline (paper §4.2 + §5)."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from repro.core.circuits import get_circuit
+from repro.core.engine import (
+    OpTelemetry,
+    dispatch,
+    op_cost_from,
+    scan,
+)
+from repro.core.engine.hierarchical import segment_bounds
+from repro.core.scan import python_exec
+from repro.data.images import make_series, stream_series
+
+
+def _affine_op(a, b):
+    """Non-commutative — any reordering the executor tries would show."""
+    return (a[0] * b[0] % 1000003, (a[1] * b[0] + b[1]) % 1000003)
+
+
+def _delays(profile, n, base=0.0004):
+    if profile == "uniform":
+        return [base] * n
+    if profile == "ramp":
+        return [base * (0.2 + 1.6 * i / max(n - 1, 1)) for i in range(n)]
+    if profile == "straggler":
+        d = [base] * n
+        d[n // 2] = base * 40
+        return d
+    raise ValueError(profile)
+
+
+def _sleepy_op(delays):
+    def op(a, b):
+        time.sleep(delays[b[1] % len(delays)])
+        return _affine_op(a, b)
+
+    return op
+
+
+# ---------------------------------------------------------------- element
+
+
+@pytest.mark.parametrize("n", list(range(1, 18)) + [64])
+def test_element_matches_oracle(n):
+    xs = [(i % 7 + 1, i) for i in range(n)]
+    ref, _ = python_exec(_affine_op, get_circuit("ladner_fischer", max(n, 1)), xs)
+    for s, t in [(2, 2), (4, 2), (3, 3)]:
+        ys = scan(_affine_op, list(xs), backend="hierarchical",
+                  num_segments=s, num_threads=t)
+        assert ys == ref, (n, s, t)
+
+
+@pytest.mark.parametrize("profile", ["uniform", "ramp", "straggler"])
+@pytest.mark.parametrize("n", [13, 64])
+def test_element_matches_oracle_under_cost_profiles(profile, n):
+    """Scheduling under real imbalance (sleeps) must not change results."""
+    xs = [(i % 7 + 1, i) for i in range(n)]
+    ref, _ = python_exec(_affine_op, get_circuit("ladner_fischer", n), xs)
+    ys = scan(_sleepy_op(_delays(profile, n)), list(xs),
+              backend="hierarchical", num_segments=4, num_threads=2)
+    assert ys == ref, (profile, n)
+
+
+def test_stats_partition_and_phases():
+    n = 64
+    xs = [(i % 7 + 1, i) for i in range(n)]
+    scan(_sleepy_op(_delays("straggler", n)), list(xs),
+         backend="hierarchical", num_segments=4, num_threads=2)
+    from repro.core.engine import hierarchical
+
+    st = hierarchical.last_stats
+    assert st is not None and st.num_segments == 4
+    assert st.segment_bounds[0][0] == 0 and st.segment_bounds[-1][1] == n - 1
+    covered = sorted(i for lo, hi in st.intervals for i in range(lo, hi + 1))
+    assert covered == list(range(n))  # intervals partition [0, N)
+    assert set(st.phase_seconds) == {"reduce", "global", "apply"}
+
+
+def test_segment_bounds_cover():
+    for n in range(1, 40):
+        for s in range(1, min(n, 9) + 1):
+            b = segment_bounds(n, s)
+            assert b[0][0] == 0 and b[-1][1] == n - 1
+            assert all(l2 == h1 + 1 for (_, h1), (l2, _) in zip(b, b[1:]))
+
+
+# ------------------------------------------------------------------ array
+
+
+def test_array_matches_oracle():
+    n = 64
+    x = jnp.arange(1.0, n + 1.0)
+    ref = np.cumsum(np.arange(1.0, n + 1.0))
+    for s in [2, 4, 8]:
+        y = scan(jnp.add, x, backend="hierarchical", num_segments=s)
+        np.testing.assert_allclose(np.asarray(y), ref, rtol=1e-6)
+
+
+def test_array_pallas_apply_matches_oracle():
+    n = 64
+    x = jnp.arange(1.0, n + 1.0)
+    y = scan(jnp.add, x, backend="hierarchical", num_segments=8,
+             use_pallas=True, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(y), np.cumsum(np.arange(1.0, n + 1.0)), rtol=1e-6
+    )
+
+
+def test_array_pytree():
+    n = 16
+    d = {"a": jnp.arange(float(n)), "b": jnp.ones((n, 2))}
+    op = lambda u, v: jax.tree.map(jnp.add, u, v)
+    y = scan(op, d, backend="hierarchical", num_segments=4)
+    np.testing.assert_allclose(np.asarray(y["a"]), np.cumsum(np.arange(n)))
+    np.testing.assert_allclose(np.asarray(y["b"][-1]), [n, n])
+
+
+def test_array_indivisible_segments_raise():
+    with pytest.raises(ValueError, match="divide"):
+        scan(jnp.add, jnp.arange(10.0), backend="hierarchical",
+             num_segments=4)
+
+
+# ------------------------------------------------- dispatch + telemetry
+
+
+def test_dispatch_hierarchical_at_scale():
+    d = dispatch(256, domain="element", op_cost=10.0, workers=32)
+    assert d.backend == "hierarchical"
+    assert d.num_segments and d.num_segments >= 2
+    assert d.num_threads and d.num_threads >= 2
+    # Below the worker threshold the single-level stealing executor stays.
+    assert dispatch(64, domain="element", op_cost=10.0,
+                    workers=4).backend == "worksteal"
+
+
+def test_telemetry_ema_and_feedback():
+    tel = OpTelemetry(name="t", ema_alpha=0.5)
+    assert tel.estimate() is None
+    tel.record(1.0)
+    tel.record(0.0)
+    assert tel.calls == 2 and abs(tel.estimate() - 0.5) < 1e-9
+    assert tel.imbalance() == pytest.approx(2.0)
+
+    class FakeOp:
+        op_cost_estimate = 0.5
+
+    assert op_cost_from(FakeOp()) == 0.5
+    assert op_cost_from(lambda a, b: a) is None
+
+
+def test_scan_consults_operator_telemetry():
+    """An operator carrying a telemetry estimate routes like an op_cost hint."""
+    calls = []
+
+    class CountingOp:
+        op_cost_estimate = 10.0  # expensive -> stealing reduce-then-scan
+
+        def __call__(self, a, b):
+            calls.append(1)
+            return _affine_op(a, b)
+
+    xs = [(i % 7 + 1, i) for i in range(32)]
+    ref, _ = python_exec(_affine_op, get_circuit("ladner_fischer", 32), xs)
+    ys = scan(CountingOp(), list(xs), workers=4)
+    assert ys == ref
+    # reduce-then-scan work ~2N (< 100), below the flat Ladner–Fischer
+    # circuit's ~129 applications at N=32 — proves the cost hint was used.
+    assert len(calls) < 100
+
+
+# ------------------------------------------------------------- pipeline
+
+
+def test_register_series_smoke():
+    """End-to-end on a tiny synthetic series: composed deformations must
+    recover the ground-truth drift below tolerance (paper §2.3.3)."""
+    key = jax.random.PRNGKey(11)
+    frames, true = make_series(key, 8, size=96, noise=0.15)
+    res = repro.register_series(
+        frames,
+        repro.RegisterSeriesConfig(backend="hierarchical", num_segments=2,
+                                   num_threads=2, telemetry_name="test_smoke"),
+    )
+    assert res.backend == "hierarchical"
+    assert res.deformations["shift"].shape == (8, 2)
+    err = np.abs(
+        np.asarray(res.deformations["shift"])[1:]
+        - np.asarray(true["shift"][1:])
+    ).max()
+    assert err < 0.35, err
+    assert res.scan_stats is not None
+    assert set(res.timings) == {"ingest", "preprocess", "scan", "compose"}
+    assert res.op_telemetry["calls"] > 0
+    assert "hierarchical" in res.report()
+
+
+def test_register_series_streaming_matches_batch():
+    key = jax.random.PRNGKey(12)
+    frames, _ = make_series(key, 6, size=96, noise=0.12)
+    chunks, _ = stream_series(key, 6, chunk_size=3, size=96, noise=0.12)
+    cfg = repro.RegisterSeriesConfig(refine=False)  # deterministic compose path
+    a = repro.register_series(frames, cfg)
+    b = repro.register_series(chunks, cfg)
+    np.testing.assert_allclose(
+        np.asarray(a.deformations["shift"]),
+        np.asarray(b.deformations["shift"]),
+        atol=1e-4,
+    )
+
+
+def test_register_series_rejects_single_frame():
+    frames, _ = make_series(jax.random.PRNGKey(0), 2, size=32)
+    with pytest.raises(ValueError, match=">= 2 frames"):
+        repro.register_series(frames[:1])

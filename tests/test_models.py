@@ -7,7 +7,6 @@ import pytest
 
 from repro.configs import get_config, get_smoke_config, list_archs
 from repro.models import lm
-from repro.models.config import SHAPES
 
 
 def _batch(cfg, key, b=2, l=64):

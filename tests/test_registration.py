@@ -3,7 +3,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 try:
     from hypothesis import given, settings, strategies as st
 except ImportError:  # offline container: deterministic fallback sampler
@@ -12,7 +11,6 @@ except ImportError:  # offline container: deterministic fallback sampler
 from repro.core.deformation import (
     compose,
     compose_batched,
-    identity_deformation,
     inverse,
     make_deformation,
     ncc,

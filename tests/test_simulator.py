@@ -1,9 +1,7 @@
 """Discrete-event simulator: paper-shaped claims at scale (Tables 3-5, Fig 8)."""
 
-import math
 
 import numpy as np
-import pytest
 
 from repro.core.simulator import (
     NetworkModel,

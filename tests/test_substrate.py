@@ -11,7 +11,7 @@ from repro.checkpoint.checkpointer import Checkpointer
 from repro.data.pipeline import PipelineConfig, TokenPipeline
 from repro.optim import adamw
 from repro.optim.compress import dequantize_int8, quantize_int8
-from repro.runtime.elastic import build_mesh, plan_rescale, rescale_batch_boundaries
+from repro.runtime.elastic import plan_rescale, rescale_batch_boundaries
 from repro.runtime.straggler import StragglerConfig, StragglerMonitor
 
 

@@ -2,7 +2,6 @@
 paper's full pipeline (registration series -> scan -> result)."""
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

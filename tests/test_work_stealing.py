@@ -10,6 +10,7 @@ except ImportError:  # offline container: deterministic fallback sampler
     from _hypothesis_shim import given, settings, strategies as st
 
 from repro.core.work_stealing import (
+    _steal_direction,
     rebalance_boundaries,
     static_reduce,
     stealing_reduce,
@@ -69,7 +70,6 @@ def test_stealing_balances_sleep_op():
     """With an imbalanced (sleepy) operator, stealing reduces the busy-time
     imbalance across threads vs the static split."""
     n, t = 60, 3
-    rng = np.random.default_rng(1410)
     # Imbalance concentrated in one region (like the paper's outliers).
     delays = np.full(n, 0.001)
     delays[: n // 3] = 0.008
@@ -86,6 +86,21 @@ def test_stealing_balances_sleep_op():
     _, st_steal = stealing_reduce(make_op(), xs, t)
     assert st_steal.imbalance() <= st_static.imbalance() + 0.05
     assert st_steal.makespan <= st_static.makespan * 1.15
+
+
+def test_steal_direction_unobserved_rates_pick_larger_gap():
+    """Tie-break fix: before either neighbour has an observed rate (both read
+    0.0 sec/op), the direction must follow the larger gap — not a fixed side
+    — so the first steals flow into the region with more unclaimed work."""
+    assert _steal_direction(0.0, 0.0, 10, 3) == "L"
+    assert _steal_direction(0.0, 0.0, 3, 10) == "R"
+    assert _steal_direction(0.0, 0.0, 4, 4) == "R"  # exact tie: either side
+    # Observed rates still dominate the choice, whatever the gap sizes.
+    assert _steal_direction(2.0, 1.0, 1, 50) == "L"
+    assert _steal_direction(1.0, 2.0, 50, 1) == "R"
+    # Empty sides remain forced regardless of rates.
+    assert _steal_direction(9.0, 0.0, 0, 5) == "R"
+    assert _steal_direction(0.0, 9.0, 5, 0) == "L"
 
 
 def test_rebalance_boundaries():
