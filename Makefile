@@ -3,7 +3,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test test-fast test-slow lint bench bench-smoke ci quickstart
+.PHONY: test test-fast test-slow lint bench bench-smoke bench-baseline ci quickstart
 
 # Tier-1: the full suite, fail-fast, exactly as the roadmap runs it.
 test:
@@ -26,10 +26,18 @@ lint:
 bench:
 	$(PY) benchmarks/run.py
 
-# The CI benchmark smoke job: crash gate + BENCH_ci.json artifacts.
+# The CI benchmark smoke job: BENCH_ci.json artifacts diffed against the
+# committed baselines (relative metrics only — raw timings never gate).
 bench-smoke:
 	$(PY) benchmarks/bench_scan_kernels.py --smoke --json BENCH_ci.json
 	$(PY) benchmarks/bench_registration_e2e.py --smoke --json BENCH_e2e_ci.json
+	$(PY) benchmarks/compare_baseline.py BENCH_ci.json benchmarks/baselines/BENCH_ci.json
+	$(PY) benchmarks/compare_baseline.py BENCH_e2e_ci.json benchmarks/baselines/BENCH_e2e_ci.json
+
+# Refresh the committed bench baselines from this machine's smoke run.
+bench-baseline:
+	$(PY) benchmarks/bench_scan_kernels.py --smoke --json benchmarks/baselines/BENCH_ci.json
+	$(PY) benchmarks/bench_registration_e2e.py --smoke --json benchmarks/baselines/BENCH_e2e_ci.json
 
 # Everything .github/workflows/ci.yml gates on, in one local target.
 ci: lint test-fast bench-smoke

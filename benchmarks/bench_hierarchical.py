@@ -1,4 +1,7 @@
-"""Paper Table 4: hierarchical (P' ranks x T threads) vs flat P-rank scan."""
+"""Paper Table 4: hierarchical (P' ranks x T threads) vs flat P-rank scan,
+plus the straggler-*segment* study: one rank's whole stretch is expensive,
+so within-rank stealing saturates and only cross-rank boundary-gap stealing
+(this repo's extension of Algorithm 1 to the segment level) helps."""
 
 from __future__ import annotations
 
@@ -9,6 +12,7 @@ from repro.core.simulator import (
 
 N = 4096
 CORES = [64, 128, 256, 512, 1024]
+SEG_STRAGGLER = 4.0  # one rank's stretch at 4x the mean element cost
 
 
 def run():
@@ -32,4 +36,29 @@ def run():
                 f"S'={flat.makespan / hier.makespan:.2f};"
                 f"flat_us={flat.makespan * 1e6:.0f}",
             ))
+    # Straggler-segment profile: hierarchical static segments vs shared
+    # inter-segment gaps (cross_stealing), both with within-rank stealing.
+    for cores in CORES:
+        threads = 12
+        ranks = cores // threads
+        n_use = N - N % ranks
+        c = costs[:n_use].copy()
+        per = n_use // ranks
+        c[per: 2 * per] *= SEG_STRAGGLER
+        stat = simulate_distributed_scan(
+            c, ranks=ranks, threads=threads, algorithm="dissemination",
+            stealing=True,
+        )
+        cross = simulate_distributed_scan(
+            c, ranks=ranks, threads=threads, algorithm="dissemination",
+            stealing=True, cross_stealing=True,
+        )
+        rows.append((
+            f"stragglerseg_cross_{cores}",
+            cross.makespan * 1e6,
+            f"S_vs_static={stat.makespan / cross.makespan:.2f};"
+            f"phase1_speedup={stat.phase1_end / cross.phase1_end:.2f};"
+            f"steals={cross.cross_steals};"
+            f"static_us={stat.makespan * 1e6:.0f}",
+        ))
     return rows

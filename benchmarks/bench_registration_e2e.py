@@ -33,6 +33,12 @@ BASE_DELAY = 0.002     # seconds per operator application (mock operator)
 # application in reduce-then-scan (phase 1 + phase 3), which says nothing
 # about scheduling quality.  n/5 keeps the straggler ~20% of total work.
 STRAGGLER = lambda n: min(50.0, n / 5.0)
+# Straggler-*segment* multiplier: every element of one whole segment costs
+# 16x base, making that segment ~3.4x the mean segment cost (with 4
+# segments, one segment can be at most 4x the mean) — the paper's Fig. 5a
+# registration-cost tail concentrated in one contiguous stretch, which
+# within-segment stealing cannot fix.
+SEG_STRAGGLER = 16.0
 SEGMENTS, SEG_THREADS = 4, 2
 FLAT_THREADS = SEGMENTS * SEG_THREADS
 
@@ -49,9 +55,10 @@ def _rigid_compose(a, b):
 
 def _elements(n, delays=None):
     """Mock RegElements: (transform, i, k, delay).  The delay rides on the
-    element so a combine costs the *right operand's* registration time;
-    combined partials cost the base rate (a fresh pair registration), not
-    their constituents' — indexing delays by wire position would bill the
+    element; a combine costs the *dearer operand's* registration time (the
+    hard frame pair dominates whichever side it is folded from, §2.3.3) and
+    a combined partial carries the base rate (a fresh pair registration),
+    not its constituents' — indexing delays by wire position would bill the
     straggler to every phase that touches its segment total."""
     if delays is None:
         delays = [0.0] * n
@@ -71,13 +78,19 @@ def _delays(profile, n, base=BASE_DELAY):
         d = [base] * n
         d[n // 2] = base * STRAGGLER(n)
         return d
+    if profile == "straggler_seg":
+        d = [base] * n
+        for i in range(n // SEGMENTS, 2 * n // SEGMENTS):
+            d[i] = base * SEG_STRAGGLER  # segment 1 of SEGMENTS is slow
+        return d
     raise ValueError(profile)
 
 
 def _make_op(base=BASE_DELAY):
     def op(a, b):
-        if b[3]:
-            time.sleep(b[3])
+        d = max(a[3], b[3])
+        if d:
+            time.sleep(d)
         assert a[2] == b[1], "non-adjacent combine"
         return (_rigid_compose(a[0], b[0]), a[1], b[2], base)
 
@@ -152,6 +165,44 @@ def _profile_rows(n):
     return rows
 
 
+def _cross_steal_rows(n):
+    """Tentpole acceptance gate: on the straggler-*segment* profile,
+    hierarchical with cross-segment stealing vs the static-segment
+    hierarchical (PR-2 behaviour).  Phase-1 makespan is the paper's
+    headline number — one slow segment bounds it exactly like the static
+    baseline until neighbours can steal across the boundary gaps."""
+    from repro.core.engine import hierarchical
+    from repro.core.engine import scan as engine_scan
+
+    ref = _seq_scan(_make_op(0.0), _elements(n))
+    elems = _elements(n, _delays("straggler_seg", n))
+    res = {}
+    for cross in [False, True]:
+        op = _make_op()
+        t0 = time.perf_counter()
+        _check(
+            engine_scan(op, list(elems), backend="hierarchical",
+                        num_segments=SEGMENTS, num_threads=SEG_THREADS,
+                        cross_steal=cross),
+            ref,
+        )
+        dt = time.perf_counter() - t0
+        st = hierarchical.last_stats
+        res[cross] = (dt, st.phase_seconds["reduce"], st)
+    dt_s, p1_s, _ = res[False]
+    dt_c, p1_c, st_c = res[True]
+    tag = f"s{SEGMENTS}x{SEG_THREADS}_n{n}"
+    return [
+        (f"e2e_stragglerseg_hier_static_{tag}", dt_s * 1e6,
+         f"phase1_s={p1_s:.3f}"),
+        (f"e2e_stragglerseg_hier_cross_{tag}", dt_c * 1e6,
+         f"phase1_s={p1_c:.3f};phase1_speedup={p1_s / p1_c:.2f};"
+         f"total_speedup={dt_s / dt_c:.2f};"
+         f"inter_segment_steals={st_c.total_inter_segment_steals()};"
+         f"meets_1p3x={p1_s / p1_c >= 1.3}"),
+    ]
+
+
 def _curve_rows(n):
     """Time-to-solution vs parallelism on the straggler profile (Fig. 9)."""
     from repro.core.engine import scan as engine_scan
@@ -218,6 +269,7 @@ def _real_rows(n_frames):
 def run(*, smoke: bool = False, frames: int | None = None):
     n = 64 if smoke else 256
     rows = _profile_rows(n)
+    rows += _cross_steal_rows(n)
     rows += _curve_rows(n)
     rows += _real_rows(frames if frames is not None else (8 if smoke else 16))
     return rows

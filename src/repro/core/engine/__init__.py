@@ -46,13 +46,20 @@ from .backends import (
 )
 from .cost import (
     CHEAP_OP_COST,
+    CROSS_STEAL_MIN_IMBALANCE,
     EXPENSIVE_OP_COST,
     Dispatch,
     dispatch,
     measure_op_cost,
 )
 from .plan import ExecutionPlan, PlanRound, get_plan, lower, plan_cache
-from .telemetry import OpTelemetry, get_telemetry, op_cost_from
+from .telemetry import (
+    OpTelemetry,
+    element_costs_from,
+    get_telemetry,
+    op_cost_from,
+    op_imbalance_from,
+)
 
 # Registers the "pallas" and "hierarchical" backends on import.
 from . import pallas_backend as _pallas_backend  # noqa: F401
@@ -62,6 +69,7 @@ Op = Callable[[Any, Any], Any]
 
 __all__ = [
     "CHEAP_OP_COST",
+    "CROSS_STEAL_MIN_IMBALANCE",
     "EXPENSIVE_OP_COST",
     "scan",
     "lower",
@@ -82,6 +90,8 @@ __all__ = [
     "OpTelemetry",
     "get_telemetry",
     "op_cost_from",
+    "op_imbalance_from",
+    "element_costs_from",
 ]
 
 
@@ -134,6 +144,8 @@ def scan(
     axis_name: Optional[str] = None,
     axis_size: Optional[int] = None,
     stealing: bool = True,
+    cross_steal: Optional[bool] = None,
+    element_costs: Optional[Sequence[float]] = None,
     interpret: Optional[bool] = None,
     use_pallas: Optional[bool] = None,
     workers: Optional[int] = None,
@@ -149,10 +161,12 @@ def scan(
 
     Backend-specific options: ``num_blocks``/``strategy`` (blocked, pallas
     tiles), ``num_threads``/``stealing`` (worksteal), ``num_segments``/
-    ``num_threads``/``use_pallas`` (hierarchical — segments × threads, see
-    ``engine/hierarchical.py``), ``axis_name``/``axis_size`` (collective —
-    call inside shard_map), ``interpret`` (pallas).  All backends consume
-    the same precompiled :class:`ExecutionPlan`, cached across calls.
+    ``num_threads``/``cross_steal``/``element_costs``/``use_pallas``
+    (hierarchical — segments × threads, inter-segment stealing and
+    cost-history segment sizing, see ``engine/hierarchical.py``),
+    ``axis_name``/``axis_size`` (collective — call inside shard_map),
+    ``interpret`` (pallas).  All backends consume the same precompiled
+    :class:`ExecutionPlan`, cached across calls.
     """
     element_domain = isinstance(xs, list)
 
@@ -190,7 +204,8 @@ def scan(
         if cost is None and measure:
             cost = measure_op_cost(op, xs)
         d = dispatch(n, domain="element" if element_domain else "array",
-                     op_cost=cost, workers=workers)
+                     op_cost=cost, workers=workers,
+                     op_imbalance=op_imbalance_from(op))
         backend = d.backend
         if where is not None and backend in ("blocked", "worksteal",
                                              "hierarchical"):
@@ -202,6 +217,7 @@ def scan(
         num_threads = num_threads if num_threads is not None else d.num_threads
         num_segments = (num_segments if num_segments is not None
                         else d.num_segments)
+        cross_steal = cross_steal if cross_steal is not None else d.cross_steal
         strategy = strategy or d.strategy
     elif where is not None and (
         backend in ("blocked", "worksteal", "hierarchical")
@@ -252,7 +268,8 @@ def scan(
         alg = algorithm if algorithm != "blelloch" else "ladner_fischer"
         plan = get_plan(alg, s) if s > 1 else None
         ys, _ = fn(op, plan, xs, num_segments=s, num_threads=t,
-                   stealing=stealing, interpret=interpret,
+                   stealing=stealing, cross_steal=cross_steal,
+                   element_costs=element_costs, interpret=interpret,
                    use_pallas=use_pallas)
         return ys
     if backend == "pallas" and num_blocks is not None and num_blocks > 1:

@@ -50,6 +50,14 @@ BLOCKED_MIN_N = 1 << 19
 HIER_MIN_WORKERS = 16
 HIER_SEGMENT_THREADS = 4  # stealing threads per segment (paper: cores/node)
 
+# Cross-segment stealing (segment-level Algorithm 1) pays when the operator's
+# per-call cost is imbalanced enough that one straggler segment would bound
+# phase 1 — the paper's Fig. 5a registration tail sits at ~3x.  Below this
+# max/mean ratio static segments are already balanced and the shared-gap
+# protocol only adds lock traffic; with *no* observed imbalance the
+# dispatcher keeps it on as cheap insurance (the gaps go idle if unneeded).
+CROSS_STEAL_MIN_IMBALANCE = 1.5
+
 
 @dataclasses.dataclass(frozen=True)
 class Dispatch:
@@ -61,6 +69,7 @@ class Dispatch:
     num_threads: Optional[int] = None
     num_segments: Optional[int] = None
     strategy: str = "reduce_then_scan"
+    cross_steal: Optional[bool] = None
     reason: str = ""
 
 
@@ -111,6 +120,7 @@ def dispatch(
     domain: str,
     op_cost: Optional[float] = None,
     workers: Optional[int] = None,
+    op_imbalance: Optional[float] = None,
 ) -> Dispatch:
     """Pick backend + circuit + block size for one scan call.
 
@@ -118,6 +128,9 @@ def dispatch(
     axis) or "element" (list of opaque items, op on single items).
     ``op_cost``: estimated seconds per operator application (user hint or
     :func:`measure_op_cost`); None means "assume cheap/vectorizable".
+    ``op_imbalance``: observed max/mean per-call cost ratio (operator
+    telemetry); decides whether cross-segment stealing is worth its shared
+    boundary gaps.  None means unobserved — stealing stays on as insurance.
     """
     if n <= 1:
         return Dispatch("element" if domain == "element" else "vector",
@@ -130,12 +143,24 @@ def dispatch(
             # Paper §4.2: at nodes × cores scale, two-level reduce-then-scan —
             # stealing within segments, a tiny cross-segment scan between.
             s = max(2, w // HIER_SEGMENT_THREADS)
+            cross = (
+                op_imbalance is None
+                or op_imbalance >= CROSS_STEAL_MIN_IMBALANCE
+            )
+            why = (
+                "unobserved imbalance" if op_imbalance is None else
+                f"imbalance {op_imbalance:.1f}x "
+                + (">=" if cross else "<")
+                + f" {CROSS_STEAL_MIN_IMBALANCE}"
+            )
             return Dispatch(
                 "hierarchical", "ladner_fischer",
                 num_segments=s, num_threads=max(2, w // s),
                 strategy="reduce_then_scan",
+                cross_steal=cross,
                 reason=f"expensive op ({cost:.2e}s), {w} workers -> "
-                       "hierarchical stealing reduce-then-scan",
+                       "hierarchical stealing reduce-then-scan; "
+                       f"cross-segment={'on' if cross else 'off'} ({why})",
             )
         if cost >= EXPENSIVE_OP_COST and w > 1:
             # Paper §4.3: op cost dominates -> reduce-then-scan (work ~2N)

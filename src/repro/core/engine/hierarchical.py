@@ -52,11 +52,18 @@ class HierStats:
     steal_stats: List[Any]                      # per-segment StealStats | None
     phase_seconds: Dict[str, float]
     total_ops: int
+    cross_steal: bool = False                   # inter-segment stealing ran
+    inter_segment_steals: List[int] = dataclasses.field(default_factory=list)
+    rebalanced: bool = False                    # AOT cost-history segment sizing
 
     def imbalance(self) -> float:
         """Max relative busy-time imbalance across segments (paper Fig. 5b)."""
         vals = [s.imbalance() for s in self.steal_stats if s is not None]
         return max(vals) if vals else 0.0
+
+    def total_inter_segment_steals(self) -> int:
+        """Boundary elements claimed across segment borders (phase 1)."""
+        return sum(self.inter_segment_steals)
 
 
 #: Stats of the most recent element-domain hierarchical execution.
@@ -89,16 +96,47 @@ def _exec_hier_element(
     num_threads: int,
     stealing: bool,
     seed: Any,
+    cross_steal: Optional[bool] = None,
+    element_costs: Optional[Sequence[float]] = None,
 ) -> Tuple[list, Any]:
-    from ..work_stealing import static_reduce, stealing_reduce
+    from ..work_stealing import (
+        _Gap,
+        cross_start_positions,
+        rebalance_boundaries,
+        static_reduce,
+        stealing_reduce,
+    )
+    from .telemetry import OpTelemetry, element_costs_from
 
     global last_stats
     n = len(xs)
     s = max(1, min(num_segments, n))
     t = max(1, num_threads)
-    bounds = segment_bounds(n, s)
+
+    # Ahead-of-time segment sizing: when the operator carries per-element
+    # cost history (RegistrationOperator telemetry, or an explicit
+    # ``element_costs``), size segments to equal *cost* instead of equal
+    # count, so a known-expensive stretch starts with fewer elements.
+    costs = element_costs if element_costs is not None else (
+        element_costs_from(op, n)
+    )
+    rebalanced = costs is not None and len(costs) == n and s > 1
+    if rebalanced:
+        bounds = rebalance_boundaries(list(costs), segment_bounds(n, s))
+    else:
+        bounds = segment_bounds(n, s)
     phase: Dict[str, float] = {}
     ops_count = 0
+
+    # Cross-segment stealing (default on): finished segments drain shared
+    # boundary gaps into still-running neighbours.  Needs stealing, >1
+    # segment, and enough elements to seat every worker mid-range.
+    cross = stealing and s > 1 if cross_steal is None else (
+        cross_steal and stealing and s > 1
+    )
+    tcounts = [max(1, min(t, (hi - lo + 1) // 2)) for lo, hi in bounds]
+    starts = cross_start_positions(bounds, tcounts, n) if cross else None
+    cross = cross and starts is not None
 
     # --- phase 1: per-segment (stealing) reduction, segments concurrent.
     def reduce_segment(lo: int, hi: int):
@@ -124,8 +162,47 @@ def _exec_hier_element(
             pscan.append(op(pscan[-1], p))
         return pscan, intervals, st, reduce_ops + len(pscan) - 1
 
+    if cross:
+        # Shared inter-segment gaps between the adjacent edge workers of
+        # neighbouring segments, plus a per-segment rate EMA so direction
+        # choice at a shared gap follows the *segment-level* Algorithm 1.
+        offs = [0]
+        for tc in tcounts:
+            offs.append(offs[-1] + tc)
+        inter: List[Optional[_Gap]] = [None] * (s + 1)
+        for i in range(1, s):
+            inter[i] = _Gap(starts[offs[i] - 1] + 1, starts[offs[i]],
+                            border=bounds[i][0])
+        seg_tel = [
+            OpTelemetry(name=f"hier_seg{i}", ema_alpha=0.4) for i in range(s)
+        ]
+
+        def reduce_segment_cross(i: int):
+            partials, st = stealing_reduce(
+                op,
+                xs,
+                tcounts[i],
+                starts=starts[offs[i] : offs[i + 1]],
+                left_gap=inter[i],
+                right_gap=inter[i + 1],
+                outer_rates=(
+                    seg_tel[i - 1].estimate if i > 0 else None,
+                    seg_tel[i + 1].estimate if i < s - 1 else None,
+                ),
+                record=seg_tel[i].record,
+            )
+            pscan = [partials[0]]
+            for p in partials[1:]:
+                pscan.append(op(pscan[-1], p))
+            return pscan, st.boundaries, st, st.total_ops + len(pscan) - 1
+
     t0 = time.perf_counter()
-    if s == 1:
+    if cross:
+        with ThreadPoolExecutor(max_workers=s) as pool:
+            seg_results = list(pool.map(reduce_segment_cross, range(s)))
+        # Boundaries moved with the steals: report the segments' final spans.
+        bounds = [(r[1][0][0], r[1][-1][1]) for r in seg_results]
+    elif s == 1:
         seg_results = [reduce_segment(*bounds[0])]
     else:
         with ThreadPoolExecutor(max_workers=s) as pool:
@@ -152,9 +229,13 @@ def _exec_hier_element(
     out: List[Any] = [None] * n
     jobs: List[Tuple[int, int, Any]] = []
     for i, (pscan, intervals, _st, _ops) in enumerate(seg_results):
-        base = seed if i == 0 else (
-            scanned[i - 1] if seed is None else op(seed, scanned[i - 1])
-        )
+        if i == 0:
+            base = seed
+        elif seed is None:
+            base = scanned[i - 1]
+        else:
+            base = op(seed, scanned[i - 1])
+            ops_count += 1  # seed combines execute the operator: count them
         for j, (lo, hi) in enumerate(intervals):
             if j == 0:
                 sj = base
@@ -187,6 +268,12 @@ def _exec_hier_element(
         steal_stats=[r[2] for r in seg_results],
         phase_seconds=phase,
         total_ops=ops_count,
+        cross_steal=cross,
+        inter_segment_steals=[
+            r[2].cross_steals() if r[2] is not None else 0
+            for r in seg_results
+        ] if cross else [0] * s,
+        rebalanced=rebalanced,
     )
     return out, total
 
@@ -287,6 +374,8 @@ def exec_hierarchical(
     num_threads: Optional[int] = None,
     stealing: bool = True,
     seed: Any = None,
+    cross_steal: Optional[bool] = None,
+    element_costs: Optional[Sequence[float]] = None,
     interpret: Optional[bool] = None,
     use_pallas: Optional[bool] = None,
     **_,
@@ -295,6 +384,10 @@ def exec_hierarchical(
 
     ``num_segments`` defaults to the plan width; ``num_threads`` is the
     work-stealing thread count *per segment* (element domain only).
+    ``cross_steal`` extends Algorithm 1 to the segment level (shared
+    boundary gaps; default on where feasible); ``element_costs`` is an
+    optional per-element cost prior for ahead-of-time segment sizing
+    (otherwise read from the operator's telemetry, if it has any).
     """
     s = num_segments if num_segments is not None else (plan.n if plan else 1)
     if isinstance(xs, list):
@@ -306,6 +399,8 @@ def exec_hierarchical(
             num_threads=num_threads if num_threads is not None else 2,
             stealing=stealing,
             seed=seed,
+            cross_steal=cross_steal,
+            element_costs=element_costs,
         )
     if seed is not None:
         raise NotImplementedError(

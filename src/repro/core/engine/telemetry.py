@@ -107,3 +107,36 @@ def op_cost_from(op) -> Optional[float]:
     if callable(est):
         est = est()
     return float(est) if est is not None else None
+
+
+def op_imbalance_from(op) -> Optional[float]:
+    """Extract the operator's observed per-call cost imbalance (max/mean).
+
+    Adapters expose ``op_imbalance_estimate`` (float or zero-arg callable;
+    None when unobserved).  The dispatcher uses it to decide whether
+    cross-segment stealing pays: a near-uniform operator gains nothing from
+    the shared boundary gaps, a heavy-tailed one gains the paper's Fig. 5b.
+    """
+    est = getattr(op, "op_imbalance_estimate", None)
+    if est is None:
+        return None
+    if callable(est):
+        est = est()
+    return float(est) if est is not None else None
+
+
+def element_costs_from(op, n: int) -> Optional[list]:
+    """Per-element cost priors from the operator's history, if it keeps any.
+
+    Adapters expose ``element_cost_estimates`` as a sequence or a callable
+    taking the element count; only a full-length vector is usable for
+    ahead-of-time segment sizing (a partial one can't place boundaries).
+    """
+    src = getattr(op, "element_cost_estimates", None)
+    if src is None:
+        return None
+    costs = src(n) if callable(src) else src
+    if costs is None:
+        return None
+    costs = list(costs)
+    return costs if len(costs) == n else None

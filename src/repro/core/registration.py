@@ -284,17 +284,70 @@ class RegistrationOperator:
         self.skipped = 0
         self.refined = 0
         self._count_lock = threading.Lock()
+        self._elem_prior: Optional[list] = None
+        self._elem_obs: dict = {}
 
     # -- the dispatcher feedback hook (read by engine.scan via telemetry).
     @property
     def op_cost_estimate(self) -> Optional[float]:
         return self.telemetry.estimate()
 
+    @property
+    def op_imbalance_estimate(self) -> Optional[float]:
+        """Observed max/mean per-call cost ratio; None until at least two
+        samples exist — a single one (e.g. the ``prime()`` seed) always
+        reads 1.0 and would wrongly disable cross-segment stealing.  Read
+        by the dispatcher (``engine/cost.py:CROSS_STEAL_MIN_IMBALANCE``)."""
+        return self.telemetry.imbalance() if self.telemetry.calls >= 2 else None
+
     def prime(self, seconds_per_call: float) -> None:
         """Seed the cost estimate before the first application (e.g. from
         the function-A preprocessing stage, whose per-pair cost is the same
         minimiser on the same frames)."""
         self.telemetry.record(seconds_per_call)
+
+    def prime_elements(self, costs) -> None:
+        """Seed *per-element* relative cost priors (any unit — e.g. the
+        function-A per-pair iteration counts, the paper's cost proxy).
+        Consumed by the hierarchical backend's ahead-of-time segment
+        sizing: segments start equal-*cost*, not equal-count."""
+        with self._count_lock:
+            self._elem_prior = [float(c) for c in costs]
+
+    def element_cost_estimates(self, n: int) -> Optional[list]:
+        """Relative per-element cost vector combining the prior with
+        observed per-application wall times, or None when neither exists
+        at this length.  Units differ (iteration counts vs seconds), so
+        observations are rescaled by aligning the two means *over the
+        observed indices* — normalizing observations by their own subset
+        mean instead would erase the imbalance signal (observing only the
+        stragglers, the likeliest case since they run longest, would map
+        every straggler to ~1.0)."""
+        with self._count_lock:
+            prior = self._elem_prior
+            obs = dict(self._elem_obs)
+        obs = {j: v for j, v in obs.items() if 0 <= j < n and v > 0}
+        have_prior = prior is not None and len(prior) == n
+        if have_prior:
+            m = sum(prior) / n
+            out = [p / m if m > 0 else 1.0 for p in prior]
+        elif len(obs) == n:
+            out = [1.0] * n  # full coverage: pure rescale below
+        else:
+            # No prior and only partial observations: there is no basis to
+            # rank unobserved elements against observed ones, and rescaling
+            # the observed subset against its own mean is exactly the
+            # signal-erasing normalization documented above.  Decline to
+            # resize rather than mislead.
+            return None
+        if obs:
+            obs_mean = sum(obs.values()) / len(obs)
+            prior_mean_at_obs = sum(out[j] for j in obs) / len(obs)
+            scale = prior_mean_at_obs / obs_mean if obs_mean > 0 else 0.0
+            if scale > 0:
+                for j, v in obs.items():
+                    out[j] = v * scale
+        return out
 
     def _guess_distance(self, ref, tmpl, guess):
         if self.fused:
@@ -305,6 +358,15 @@ class RegistrationOperator:
         import time
 
         t0 = time.perf_counter()
+        # Attribute the cost to whichever operands ARE single scan
+        # elements — left folds (stealing_reduce extending left) pass the
+        # fresh element as ``a`` and the partial as ``b``, right folds the
+        # reverse; indexing ``b`` unconditionally would credit half of
+        # phase 1 to one unrelated right-edge element.  When both are
+        # single (a thread's first combine) the registration involves both
+        # frames, so both EMAs receive the sample.  Partial∘partial
+        # combines (pscan, phase 2) have no single element and are skipped.
+        elem_idxs = [e.k - 1 for e in (a, b) if e.k - e.i == 1]
         try:
             reg = self.registrar
             assert a.k == b.i, f"non-adjacent elements {a.i, a.k} . {b.i, b.k}"
@@ -324,4 +386,12 @@ class RegistrationOperator:
                 self.refined += 1
             return RegElement(res.deformation, a.i, b.k)
         finally:
-            self.telemetry.record(time.perf_counter() - t0)
+            dt = time.perf_counter() - t0
+            self.telemetry.record(dt)
+            if elem_idxs:
+                with self._count_lock:
+                    for j in elem_idxs:
+                        prev = self._elem_obs.get(j)
+                        self._elem_obs[j] = (
+                            dt if prev is None else 0.5 * prev + 0.5 * dt
+                        )

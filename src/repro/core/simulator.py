@@ -95,6 +95,7 @@ class SimResult:
     global_end: float
     busy: np.ndarray              # per-worker busy seconds
     energy: float = 0.0
+    cross_steals: int = 0         # elements claimed across segment borders
 
     def efficiency(self, serial_time: float, workers: int) -> float:
         return serial_time / (self.makespan * workers) if self.makespan else 0.0
@@ -176,6 +177,113 @@ def _simulate_stealing_reduce(
     return finish, busy, int(ops.sum()) + 0, list(zip(pl, pr))
 
 
+def _simulate_cross_stealing_reduce(
+    costs: np.ndarray, num_segments: int, threads: int
+) -> Optional[Tuple[List[np.ndarray], List[np.ndarray], int,
+                    List[List[Tuple[int, int]]], int]]:
+    """Virtual-time twin of the *cross-segment* stealing protocol
+    (``engine/hierarchical.py``): S segments x T threads, shared
+    inter-segment gaps between the edge workers of neighbouring segments,
+    and — exactly as on the host — direction choice at a shared gap driven
+    by the neighbouring *segment's* observed seconds-per-op instead of a
+    single thread's.  The seating geometry is the host's own
+    ``work_stealing.cross_start_positions``; like the host, infeasible
+    seating (too few elements) returns None and the caller falls back to
+    static segments.
+
+    Returns per-segment (finish, busy) worker arrays, total operator
+    applications, per-segment global [pl, pr] thread boundaries, and the
+    number of elements claimed across segment borders.
+    """
+    from .work_stealing import _steal_direction, cross_start_positions
+
+    n = len(costs)
+    s = num_segments
+    per = n // s
+    bounds = [(i * per, (i + 1) * per - 1) for i in range(s)]
+    tcounts = [max(1, min(threads, (hi - lo + 1) // 2)) for lo, hi in bounds]
+    starts = cross_start_positions(bounds, tcounts, n)
+    if starts is None:
+        return None
+    w = len(starts)
+    offs = [0]
+    seg_of: List[int] = []
+    for i, tc in enumerate(tcounts):
+        seg_of += [i] * tc
+        offs.append(offs[-1] + tc)
+    gaps: List[List[int]] = [[0, 0] for _ in range(w + 1)]
+    for i in range(1, w):
+        gaps[i] = [starts[i - 1] + 1, starts[i]]
+    busy = np.zeros(w)
+    ops = np.zeros(w, dtype=np.int64)
+    seg_busy = np.zeros(s)
+    seg_ops = np.zeros(s, dtype=np.int64)
+    pl = list(starts)
+    pr = list(starts)
+    heap = [(float(costs[starts[i]]), i) for i in range(w)]
+    for i in range(w):
+        busy[i] = costs[starts[i]]
+    heapq.heapify(heap)
+    finish = np.zeros(w)
+    cross = 0
+
+    def seg_rate(j: int) -> float:
+        # Host semantics: 0.0 while unobserved (no completed application).
+        return seg_busy[j] / seg_ops[j] if seg_ops[j] else 0.0
+
+    def thread_rate(v: int) -> float:
+        return busy[v] / ops[v] if ops[v] else 0.0
+
+    while heap:
+        now, wid = heapq.heappop(heap)
+        si = seg_of[wid]
+        first = wid == offs[si]
+        last = wid == offs[si + 1] - 1
+        lg, rg = gaps[wid], gaps[wid + 1]
+        ls, rs = lg[1] - lg[0], rg[1] - rg[0]
+        if ls <= 0 and rs <= 0:
+            finish[wid] = now
+            continue
+        # The host's own rule — including the larger-gap tie-break while
+        # both rates are unobserved — so the twin cannot drift from it.
+        # Empty-side rates stay 0.0 (the global edges have no neighbour
+        # segment to read).
+        rate_l = 0.0 if ls <= 0 else (
+            seg_rate(si - 1) if first else thread_rate(wid - 1)
+        )
+        rate_r = 0.0 if rs <= 0 else (
+            seg_rate(si + 1) if last else thread_rate(wid + 1)
+        )
+        d = _steal_direction(rate_l, rate_r, ls, rs)
+        # As on the host: a cross steal is a shared-gap claim that landed
+        # beyond the *static* border, not any drain of the no-man's-land.
+        if d == "L":
+            lg[1] -= 1
+            idx = lg[1]
+            pl[wid] = idx
+            if first and si > 0 and idx < bounds[si][0]:
+                cross += 1
+        else:
+            idx = rg[0]
+            rg[0] += 1
+            pr[wid] = idx
+            if last and si < s - 1 and idx >= bounds[si + 1][0]:
+                cross += 1
+        c = float(costs[idx])
+        busy[wid] += c
+        ops[wid] += 1
+        seg_busy[si] += c
+        seg_ops[si] += 1
+        heapq.heappush(heap, (now + c, wid))
+    fin_per = [finish[offs[i]: offs[i + 1]] for i in range(s)]
+    busy_per = [busy[offs[i]: offs[i + 1]] for i in range(s)]
+    bnds_per = [
+        list(zip(pl[offs[i]: offs[i + 1]], pr[offs[i]: offs[i + 1]]))
+        for i in range(s)
+    ]
+    return fin_per, busy_per, int(ops.sum()), bnds_per, cross
+
+
 # ---------------------------------------------------------------------------
 # Global phase: circuit execution over ranks in virtual time
 # ---------------------------------------------------------------------------
@@ -228,6 +336,7 @@ def simulate_distributed_scan(
     threads: int = 1,
     algorithm: str = "ladner_fischer",
     stealing: bool = False,
+    cross_stealing: bool = False,
     strategy: str = "reduce_then_scan",
     net: NetworkModel = NetworkModel(),
     apply_costs: Optional[np.ndarray] = None,
@@ -238,9 +347,12 @@ def simulate_distributed_scan(
     """Simulate one distributed scan over N = len(costs) elements.
 
     ``ranks`` x ``threads`` workers (threads>1 => hierarchical scan §4.2;
-    stealing=True => dynamic hierarchical scan §4.3).  ``apply_costs`` are the
-    phase-3 per-element costs (defaults to ``costs``); ``preprocess_costs``
-    models the massively-parallel function-A step of *full registration*.
+    stealing=True => dynamic hierarchical scan §4.3; cross_stealing=True
+    additionally shares the inter-rank boundary gaps so a finished rank's
+    edge workers steal from a straggler neighbour — the host protocol of
+    ``engine/hierarchical.py``).  ``apply_costs`` are the phase-3
+    per-element costs (defaults to ``costs``); ``preprocess_costs`` models
+    the massively-parallel function-A step of *full registration*.
     """
     n = len(costs)
     p = ranks
@@ -265,28 +377,47 @@ def simulate_distributed_scan(
         work += n
 
     # ---- Phase 1: local reduction per rank (over `threads` workers).
+    # ``rank_results`` carries (per-worker finish, busy, GLOBAL boundaries)
+    # per rank, whether the reduce ran rank-local or as one cross-rank
+    # stealing pass over shared boundary gaps.
     rank_ready = np.zeros(p)
     boundaries_per_rank: List[List[Tuple[int, int]]] = []
-    for r in range(p):
-        seg = costs[r * per_rank : (r + 1) * per_rank]
-        if stealing and threads > 1:
-            fin, b, ops, bnds = _simulate_stealing_reduce(seg, threads)
-        else:
-            if threads > 1:
-                tb = [
-                    (i * per_rank // threads, (i + 1) * per_rank // threads - 1)
-                    for i in range(threads)
-                ]
+    cross_count = 0
+    rank_results = None
+    if cross_stealing and stealing and p > 1:
+        cross_res = _simulate_cross_stealing_reduce(costs, p, threads)
+        if cross_res is not None:  # None: infeasible seating, host falls
+            fin_per, busy_per, cops, bnds_per, cross_count = cross_res
+            work += cops           # back to static segments — so do we
+            rank_results = list(zip(fin_per, busy_per, bnds_per))
+    if rank_results is None:
+        rank_results = []
+        for r in range(p):
+            seg = costs[r * per_rank : (r + 1) * per_rank]
+            if stealing and threads > 1:
+                fin, b, ops, bnds = _simulate_stealing_reduce(seg, threads)
             else:
-                tb = [(0, per_rank - 1)]
-            fin, b, ops = _simulate_static_reduce(seg, tb)
-            bnds = tb
+                if threads > 1:
+                    tb = [
+                        (i * per_rank // threads,
+                         (i + 1) * per_rank // threads - 1)
+                        for i in range(threads)
+                    ]
+                else:
+                    tb = [(0, per_rank - 1)]
+                fin, b, ops = _simulate_static_reduce(seg, tb)
+                bnds = tb
+            work += ops
+            off = r * per_rank
+            rank_results.append(
+                (fin, b, [(lo + off, hi + off) for lo, hi in bnds])
+            )
+    for r, (fin, b, bnds) in enumerate(rank_results):
         boundaries_per_rank.append(bnds)
-        work += ops
-        busy[r * threads : (r + 1) * threads] += b
+        busy[r * threads : r * threads + len(b)] += b
         # Hierarchical: local circuit scan over the T thread partials (§4.2).
-        if threads > 1:
-            local_circ = get_circuit("dissemination", threads)
+        if len(fin) > 1:
+            local_circ = get_circuit("dissemination", len(fin))
             local_net = NetworkModel(latency=1e-7, bandwidth=100e9, msg_bytes=net.msg_bytes)
             ready, lops = _simulate_circuit(
                 local_circ, fin, float(np.median(costs)), local_net
@@ -302,13 +433,18 @@ def simulate_distributed_scan(
     gready, gops = _simulate_circuit(circ, rank_ready, float(np.median(costs)), net)
     work += gops
 
-    # ---- Phase 3: seeded local scans over final boundaries.
+    # ---- Phase 3: seeded local scans over final (global) boundaries.
+    # A rank's apply cannot start before BOTH its seed arrives (global
+    # exclusive prefix from rank r-1) and its own phase 1 finished — the
+    # interval seeds come from the local scan over its thread partials.
     finish = np.zeros(p)
     for r in range(p):
-        seed_t = gready[r - 1] if r > 0 else rank_ready[r]
+        seed_t = (
+            max(gready[r - 1], rank_ready[r]) if r > 0 else rank_ready[r]
+        )
         t_fin = 0.0
         for w, (lo, hi) in enumerate(boundaries_per_rank[r]):
-            c = apply_costs[r * per_rank + lo : r * per_rank + hi + 1].sum()
+            c = apply_costs[lo : hi + 1].sum()
             busy[r * threads + w] += c
             t_fin = max(t_fin, seed_t + c)
             work += hi - lo + 1
@@ -323,6 +459,7 @@ def simulate_distributed_scan(
         global_end=float(gready.max()),
         busy=busy,
         energy=energy,
+        cross_steals=cross_count,
     )
 
 

@@ -19,6 +19,14 @@ operator is expected to be expensive (seconds — image registration, or the
 paper's sleep-based mock operators), so Python-level synchronization overhead
 is negligible, exactly as MPI/OpenMP overhead was in the paper.
 
+The same protocol is *promoted to the segment level* by the hierarchical
+backend (``engine/hierarchical.py``): adjacent segments of a two-level
+reduce share boundary ``_Gap`` objects, their edge threads drain them
+concurrently, and direction choice at a shared gap compares per-segment
+rate EMAs instead of thread rates — so a finished segment steals from a
+straggler neighbour instead of idling (see ``stealing_reduce``'s
+``starts``/``left_gap``/``right_gap``/``outer_rates`` parameters).
+
 The deterministic virtual-time twin used for >10^3-core studies lives in
 ``simulator.py``; the compiled-SPMD derivative (ahead-of-step boundary
 rebalancing) in ``runtime/straggler.py``.
@@ -39,11 +47,27 @@ Op = Callable[[Any, Any], Any]
 
 @dataclasses.dataclass
 class _Gap:
-    """Unclaimed elements between two adjacent threads: half-open [lo, hi)."""
+    """Unclaimed elements between two adjacent workers: half-open [lo, hi).
+
+    A gap is *private* when both sides are threads of the same segment and
+    *shared* when it sits between two segments of a hierarchical phase 1
+    (``engine/hierarchical.py`` builds those): a finished segment's edge
+    thread keeps draining the shared gap, stealing boundary elements the
+    static decomposition would have billed to its still-running neighbour.
+    ``taken_left``/``taken_right`` count claims per side so inter-segment
+    steal traffic can be reported per boundary.  For a shared gap,
+    ``border`` records the *static* segment boundary inside it (first
+    element of the right segment): a claim only counts as a cross-segment
+    steal when the claimed index lies on the other side of it — draining
+    your own half of the no-man's-land is ordinary gap consumption.
+    """
 
     lo: int
     hi: int
     lock: threading.Lock = dataclasses.field(default_factory=threading.Lock)
+    taken_left: int = 0
+    taken_right: int = 0
+    border: Optional[int] = None
 
     def size(self) -> int:
         return max(0, self.hi - self.lo)
@@ -54,6 +78,7 @@ class _Gap:
             if self.lo < self.hi:
                 i = self.lo
                 self.lo += 1
+                self.taken_left += 1
                 return i
             return None
 
@@ -62,6 +87,7 @@ class _Gap:
         with self.lock:
             if self.lo < self.hi:
                 self.hi -= 1
+                self.taken_right += 1
                 return self.hi
             return None
 
@@ -73,6 +99,8 @@ class ThreadStats:
     pl: int = 0
     pr: int = 0
     finish_time: float = 0.0
+    cross_steals: int = 0   # claims taken from a shared inter-segment gap
+    failed_takes: int = 0   # lost take races (each followed by a backoff)
 
     def rate(self) -> float:
         """Observed seconds per operator application (t_I in the paper)."""
@@ -93,6 +121,10 @@ class StealStats:
         busy = [t.busy_time for t in self.threads]
         mean = sum(busy) / len(busy)
         return (max(busy) - mean) / mean if mean > 0 else 0.0
+
+    def cross_steals(self) -> int:
+        """Elements this reduce claimed from shared inter-segment gaps."""
+        return sum(t.cross_steals for t in self.threads)
 
 
 def _steal_direction(
@@ -132,28 +164,95 @@ def _start_positions(n: int, t: int) -> List[int]:
     return starts
 
 
+def cross_start_positions(
+    bounds: Sequence[Tuple[int, int]], tcounts: Sequence[int], n: int
+) -> Optional[List[int]]:
+    """Worker start positions for cross-segment stealing — the single
+    source of the seating geometry, shared by the host executor
+    (``engine/hierarchical.py``) and its virtual-time twin
+    (``simulator._simulate_cross_stealing_reduce``) so the two protocols
+    cannot drift.
+
+    The global edges are pinned to 0 and N-1 (nothing beyond them to
+    steal); *every other* worker — including segment-edge workers — starts
+    at the middle of its even per-thread sub-range, so the regions
+    straddling the static segment borders stay unclaimed shared gaps until
+    one side wins them.  Returns None when N is too small to seat every
+    worker (callers fall back to static segments).
+    """
+    starts: List[int] = []
+    for (lo, hi), tc in zip(bounds, tcounts):
+        seg = (hi - lo + 1) / tc
+        for j in range(tc):
+            starts.append(lo + int(j * seg + seg / 2))
+    starts[0] = 0
+    starts[-1] = n - 1
+    for i in range(1, len(starts)):
+        starts[i] = max(starts[i], starts[i - 1] + 1)
+    return starts if starts[-1] == n - 1 else None
+
+
 def stealing_reduce(
     op: Op,
     items: Sequence[Any],
     num_threads: int,
     *,
     clock: Callable[[], float] = time.monotonic,
+    starts: Optional[Sequence[int]] = None,
+    left_gap: Optional[_Gap] = None,
+    right_gap: Optional[_Gap] = None,
+    outer_rates: Tuple[Optional[Callable[[], Optional[float]]],
+                       Optional[Callable[[], Optional[float]]]] = (None, None),
+    record: Optional[Callable[[float], None]] = None,
 ) -> Tuple[List[Any], StealStats]:
     """Phase 1 of reduce-then-scan with work stealing (Algorithm 1).
 
     Returns per-thread partial reductions over the contiguous intervals each
     thread ended up owning, plus stealing statistics.
+
+    Standalone use covers ``items`` exactly.  As one *segment* of a
+    cross-segment hierarchical phase 1, the caller passes explicit global
+    ``starts`` (``items`` is then the full element list, indexed globally)
+    plus the shared boundary gaps:
+
+    ``left_gap`` / ``right_gap``
+        shared inter-segment :class:`_Gap` objects this segment's edge
+        threads drain concurrently with the neighbour segment's edge
+        threads — claims from them are *cross-segment steals*.
+    ``outer_rates``
+        zero-arg callables returning the left/right neighbour *segment's*
+        observed seconds-per-op (an EMA from ``engine/telemetry.py``), used
+        for Algorithm 1's direction choice at the shared gaps exactly as
+        thread rates are used at private gaps.  ``None`` reads as
+        unobserved (0.0) and falls back to the larger-gap tie-break.
+    ``record``
+        per-application duration callback feeding this segment's own rate
+        EMA, so *its* neighbours can make the symmetric choice.
     """
     n = len(items)
     t = num_threads
-    starts = _start_positions(n, t)
-    # gaps[i] sits between thread i-1 and thread i (i in 1..t-1).
+    if starts is None:
+        starts = _start_positions(n, t)
+    elif len(starts) != t:
+        raise ValueError(f"{len(starts)} starts for {t} threads")
+    # gaps[i] sits between thread i-1 and thread i (i in 1..t-1); gaps[0]
+    # and gaps[t] are the segment's outer boundaries — None standalone,
+    # shared inter-segment gaps under cross-segment stealing.
     gaps: List[Optional[_Gap]] = [None] * (t + 1)
+    gaps[0] = left_gap
+    gaps[t] = right_gap
     for i in range(1, t):
         gaps[i] = _Gap(starts[i - 1] + 1, starts[i])
     stats = [ThreadStats(pl=s, pr=s) for s in starts]
     results: List[Any] = [None] * t
     t0 = clock()
+
+    def _outer_rate(side: int) -> float:
+        fn = outer_rates[side]
+        if fn is None:
+            return 0.0
+        r = fn() if callable(fn) else fn
+        return 0.0 if r is None else float(r)
 
     def worker(tid: int) -> None:
         st = stats[tid]
@@ -162,35 +261,55 @@ def stealing_reduce(
         begin = clock()
         res = items[starts[tid]]
         st.busy_time += clock() - begin
+        spins = 0
         while True:
             ls = left.size() if left else 0
             rs = right.size() if right else 0
             if ls == 0 and rs == 0:
                 break
             # Greedy: move toward the *slower* neighbour (higher sec/op);
-            # unobserved rates tie-break on the larger gap.
+            # unobserved rates tie-break on the larger gap.  Edge threads
+            # of a segment compare against the neighbour *segment's* rate.
+            rate_l = stats[tid - 1].rate() if tid > 0 else _outer_rate(0)
+            rate_r = stats[tid + 1].rate() if tid < t - 1 else _outer_rate(1)
             d = _steal_direction(
-                stats[tid - 1].rate() if left else 0.0,
-                stats[tid + 1].rate() if right else 0.0,
+                rate_l if left else 0.0,
+                rate_r if right else 0.0,
                 ls, rs,
             )
+            idx = left.take_right() if d == "L" else right.take_left()
+            if idx is None:
+                # Lost the race for the gap's last element(s).  Yield, then
+                # back off (bounded) before re-observing both gap sizes —
+                # a tight retry here spins a core while a neighbour that
+                # won the race is still mid-application.
+                st.failed_takes += 1
+                spins += 1
+                time.sleep(
+                    0.0 if spins <= 2 else min(1e-3, 2e-5 * (1 << min(spins, 6)))
+                )
+                continue
+            spins = 0
+            b = clock()
             if d == "L":
-                idx = left.take_right()
-                if idx is None:
-                    continue
-                b = clock()
                 res = op(items[idx], res)
-                st.busy_time += clock() - b
                 st.pl = idx
             else:
-                idx = right.take_left()
-                if idx is None:
-                    continue
-                b = clock()
                 res = op(res, items[idx])
-                st.busy_time += clock() - b
                 st.pr = idx
+            dt = clock() - b
+            st.busy_time += dt
             st.ops += 1
+            if record is not None:
+                record(dt)
+            # Cross-segment steal = a claim from a shared outer gap that
+            # landed beyond the static border (in the neighbour's half).
+            if (tid == 0 and d == "L" and left.border is not None
+                    and idx < left.border):
+                st.cross_steals += 1
+            elif (tid == t - 1 and d == "R" and right.border is not None
+                    and idx >= right.border):
+                st.cross_steals += 1
         results[tid] = res
         st.finish_time = clock() - t0
 
@@ -299,9 +418,13 @@ def work_stealing_scan(
     for i in range(len(bounds)):
         if i == 0:
             seeds.append(seed)
+        elif seed is None:
+            seeds.append(scanned[i - 1])
         else:
-            s = scanned[i - 1]
-            seeds.append(s if seed is None else op(seed, s))
+            # Seed combines execute the operator — they count toward the
+            # total-work claim (~3N for a seeded full scan) like any other.
+            seeds.append(op(seed, scanned[i - 1]))
+            stats.total_ops += 1
 
     def apply_worker(tid: int) -> None:
         lo, hi = bounds[tid]
@@ -332,29 +455,46 @@ def rebalance_boundaries(
     Given measured per-element costs from the previous step, move each
     boundary between neighbours so prefix-balanced load is achieved — the same
     greedy "give work to the slower side" rule as Algorithm 1, applied once,
-    offline.  Used by ``runtime/straggler.py`` to rebalance host shards.
+    offline.  Used by ``runtime/straggler.py`` to rebalance host shards and
+    by ``engine/hierarchical.py`` for ahead-of-time segment sizing from
+    operator cost history.
+
+    Always returns ``len(boundaries)`` contiguous inclusive intervals
+    covering ``[0, len(costs))`` in order; when there are more segments than
+    elements the trailing segments are *empty*, encoded as ``(lo, lo - 1)``
+    so contiguity (``next.lo == prev.hi + 1``) still holds.  All-zero (or
+    empty) cost vectors carry no imbalance signal and fall back to an even
+    split rather than closing every segment after one element.
     """
-    total = float(sum(costs))
+    n = len(costs)
     t = len(boundaries)
-    target = total / t
+    if t == 0:
+        return []
+    weights = [float(c) for c in costs]
+    total = sum(weights)
+    if total <= 0.0:
+        weights = [1.0] * n
+        total = float(n)
     out: List[Tuple[int, int]] = []
     lo = 0
     acc = 0.0
-    tid = 0
-    for i, c in enumerate(costs):
-        acc += c
-        # Close the current segment once it reaches its fair share, keeping
-        # at least one element per remaining segment.
-        remaining = len(costs) - (i + 1)
-        if (acc >= target * (tid + 1) and remaining >= (t - tid - 1)) or (
-            remaining == t - tid - 1
-        ):
-            out.append((lo, i))
-            lo = i + 1
-            tid += 1
-            if tid == t - 1:
-                break
-    out.append((lo, len(costs) - 1))
-    while len(out) < t:  # degenerate tiny inputs
-        out.append((len(costs) - 1, len(costs) - 2))
+    for tid in range(t):
+        if lo >= n:
+            out.append((n, n - 1))  # empty tail segment (t > n)
+            continue
+        if tid == t - 1:
+            out.append((lo, n - 1))
+            lo = n
+            continue
+        # Extend to the cumulative fair share, keeping at least one element
+        # for every remaining segment while elements remain.
+        hi_cap = max(lo, n - 1 - (t - tid - 1))
+        target = total * (tid + 1) / t
+        hi = lo
+        acc += weights[lo]
+        while hi < hi_cap and acc < target:
+            hi += 1
+            acc += weights[hi]
+        out.append((lo, hi))
+        lo = hi + 1
     return out

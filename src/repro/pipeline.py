@@ -53,6 +53,8 @@ class RegisterSeriesConfig:
     num_segments: Optional[int] = None   # hierarchical: node-local segments
     num_threads: Optional[int] = None    # threads (per segment, if hier)
     stealing: bool = True
+    cross_steal: Optional[bool] = None   # inter-segment stealing; None ->
+                                         # dispatcher rule (telemetry imbalance)
     workers: Optional[int] = None
     skip_tol: Optional[float] = None     # fused guess check threshold
     fused_ncc: Optional[bool] = None     # route checks through warp_ncc
@@ -91,12 +93,22 @@ class SeriesResult:
                 f"(imbalance {tel['imbalance']:.1f}x)"
             )
         if self.scan_stats is not None:
-            ph = self.scan_stats.phase_seconds
+            st = self.scan_stats
+            ph = st.phase_seconds
             lines.append(
-                f"  hierarchical: {self.scan_stats.num_segments} segments x "
-                f"{self.scan_stats.threads_per_segment} threads; "
+                f"  hierarchical: {st.num_segments} segments x "
+                f"{st.threads_per_segment} threads; "
                 + ", ".join(f"{k}={v:.3f}s" for k, v in ph.items())
             )
+            if getattr(st, "cross_steal", False):
+                per_seg = ",".join(str(k) for k in st.inter_segment_steals)
+                lines.append(
+                    "  cross-segment steals: "
+                    f"{st.total_inter_segment_steals()} "
+                    f"(per segment: {per_seg})"
+                    + ("; cost-history segment sizing"
+                       if st.rebalanced else "")
+                )
         return "\n".join(lines)
 
 
@@ -104,31 +116,51 @@ def _prefetched(chunks: Iterable, depth: int = 1):
     """Pull ``chunks`` on a background thread, ``depth`` ahead of the
     consumer — acquisition/rendering of chunk k+1 overlaps function-A
     preprocessing of chunk k (XLA releases the GIL during both).  Producer
-    exceptions re-raise at the consuming ``next()``."""
+    exceptions re-raise at the consuming ``next()``.
+
+    The producer only ever blocks on the bounded queue *with a timeout*,
+    re-checking a stop signal the consumer sets when the generator is
+    closed or abandoned early — an unconditional ``q.put`` would park the
+    daemon thread forever on a full queue (and pin the source iterator)
+    once the consumer is gone."""
     import queue
     import threading as _threading
 
     q: queue.Queue = queue.Queue(maxsize=max(depth, 1))
     end = object()
+    stop = _threading.Event()
     err: List[BaseException] = []
+
+    def _put(item) -> bool:
+        while not stop.is_set():
+            try:
+                q.put(item, timeout=0.05)
+                return True
+            except queue.Full:
+                continue
+        return False
 
     def producer():
         try:
             for c in chunks:
-                q.put(c)
+                if not _put(c):
+                    return  # consumer gone: drop the rest, exit cleanly
         except BaseException as e:  # noqa: BLE001 — re-raised in consumer
             err.append(e)
         finally:
-            q.put(end)
+            _put(end)
 
     _threading.Thread(target=producer, daemon=True).start()
-    while True:
-        c = q.get()
-        if c is end:
-            if err:
-                raise err[0]
-            return
-        yield c
+    try:
+        while True:
+            c = q.get()
+            if c is end:
+                if err:
+                    raise err[0]
+                return
+            yield c
+    finally:
+        stop.set()
 
 
 def _ingest_and_preprocess(frames_in, cfg: RegisterSeriesConfig, timings):
@@ -153,6 +185,7 @@ def _ingest_and_preprocess(frames_in, cfg: RegisterSeriesConfig, timings):
 
     frames_list: List[jax.Array] = []
     defs: List[Deformation] = []
+    iters: List[Any] = []
     prev_last: Optional[jax.Array] = None
     t_ingest = 0.0
     t_pre = 0.0
@@ -166,6 +199,10 @@ def _ingest_and_preprocess(frames_in, cfg: RegisterSeriesConfig, timings):
         t_ingest += time.perf_counter() - t0
         if chunk is None:
             break
+        if chunk.shape[0] == 0:
+            # A stream may emit empty chunks (e.g. a ragged tail); there is
+            # nothing to register and no last frame to carry forward.
+            continue
         frames_list.append(chunk)
         t0 = time.perf_counter()
         refs = chunk[:-1] if prev_last is None else jnp.concatenate(
@@ -176,6 +213,9 @@ def _ingest_and_preprocess(frames_in, cfg: RegisterSeriesConfig, timings):
             res = pair_fn(refs, tmps)
             jax.block_until_ready(res.deformation)
             defs.append(res.deformation)
+            # Per-pair minimiser iteration counts: the operator-cost proxy
+            # that later seeds ahead-of-time segment sizing.
+            iters.append(jax.device_get(res.iterations))
         prev_last = chunk[-1]
         t_pre += time.perf_counter() - t0
 
@@ -194,7 +234,10 @@ def _ingest_and_preprocess(frames_in, cfg: RegisterSeriesConfig, timings):
     ]
     timings["ingest"] = t_ingest
     timings["preprocess"] = t_pre
-    return frames, elems, t_pre / max(n - 1, 1)
+    pair_iters = (
+        [int(v) for arr in iters for v in arr] if iters else None
+    )
+    return frames, elems, t_pre / max(n - 1, 1), pair_iters
 
 
 def register_series(
@@ -208,7 +251,7 @@ def register_series(
     to frame 0, with per-stage timings and operator telemetry.
     """
     timings: Dict[str, float] = {}
-    frames_arr, elems, sec_per_pair = _ingest_and_preprocess(
+    frames_arr, elems, sec_per_pair, pair_iters = _ingest_and_preprocess(
         frames, cfg, timings
     )
 
@@ -250,14 +293,22 @@ def register_series(
             # Telemetry priming: function A's per-pair cost is the best
             # prior for function B (same minimiser, same frames).
             op.prime(sec_per_pair)
+        if pair_iters is not None and len(pair_iters) == len(elems):
+            # Per-pair iteration counts prime the *per-element* cost
+            # history, so the hierarchical backend can size segments to
+            # equal cost ahead of time (straggler pairs are already
+            # visible in function A's convergence behaviour).
+            op.prime_elements(pair_iters)
         from repro.core.engine import dispatch as cost_dispatch
 
         num_segments, num_threads = cfg.num_segments, cfg.num_threads
+        cross_steal = cfg.cross_steal
         algorithm = cfg.algorithm
         if backend_used is None:
             d = cost_dispatch(
                 len(elems), domain="element",
                 op_cost=op.op_cost_estimate, workers=cfg.workers,
+                op_imbalance=op.op_imbalance_estimate,
             )
             # Execute exactly what the dispatcher decided (its circuit,
             # segment and thread counts — unless the config pins them).
@@ -268,6 +319,8 @@ def register_series(
                 num_segments = d.num_segments
             if num_threads is None:
                 num_threads = d.num_threads
+            if cross_steal is None:
+                cross_steal = d.cross_steal
         out = engine_scan(
             op,
             list(elems),
@@ -276,6 +329,7 @@ def register_series(
             num_segments=num_segments,
             num_threads=num_threads,
             stealing=cfg.stealing,
+            cross_steal=cross_steal,
             workers=cfg.workers,
         )
         if backend_used == "hierarchical":

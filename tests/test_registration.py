@@ -147,3 +147,48 @@ def test_pure_compose_scan_vectorized():
                                    np.asarray(ref["angle"]), rtol=1e-5, atol=1e-6)
         np.testing.assert_allclose(np.asarray(y["shift"]),
                                    np.asarray(ref["shift"]), rtol=1e-4, atol=1e-5)
+
+
+def test_operator_imbalance_needs_two_samples():
+    """A single telemetry sample (e.g. the pipeline's prime()) always reads
+    max/mean == 1.0 and must NOT masquerade as observed balance — it would
+    wrongly disable cross-segment stealing on the first scan."""
+    from repro.core.registration import RegistrationOperator
+
+    frames, _ = make_series(jax.random.PRNGKey(0), 3, size=32)
+    op = RegistrationOperator(SeriesRegistrar(frames), name="t_imb")
+    assert op.op_imbalance_estimate is None
+    op.prime(0.5)
+    assert op.op_imbalance_estimate is None  # one sample = no information
+    op.telemetry.record(1.5)
+    assert op.op_imbalance_estimate is not None
+
+
+def test_element_cost_estimates_preserve_straggler_signal():
+    """Observations are rescaled against the prior over the *observed
+    indices*: seeing only the straggler must not renormalize it to ~1.0
+    (subset-mean normalization erased exactly the signal AOT sizing
+    needs)."""
+    from repro.core.registration import RegistrationOperator
+
+    frames, _ = make_series(jax.random.PRNGKey(0), 3, size=32)
+    op = RegistrationOperator(SeriesRegistrar(frames), name="t_elem")
+    assert op.element_cost_estimates(8) is None
+    # No prior + partial observations = no basis to rank the unobserved:
+    # must decline instead of renormalizing the subset to ~1.0.
+    op._elem_obs[3] = 4.0
+    assert op.element_cost_estimates(8) is None
+    op._elem_obs.clear()
+    op.prime_elements([8.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0])
+    base = op.element_cost_estimates(8)
+    assert base[0] / base[1] == 8.0
+    # One observation of the straggler only (it runs longest, so it is the
+    # likeliest to be observed): relative costs must be preserved.
+    op._elem_obs[0] = 4.0  # seconds
+    est = op.element_cost_estimates(8)
+    assert est[0] / est[1] > 6.0, est
+    # Two observations shift the balance by their *relative* magnitudes.
+    op._elem_obs[1] = 4.0  # element 1 measured as dear as the straggler
+    est = op.element_cost_estimates(8)
+    assert abs(est[0] - est[1]) < 1e-9
+    assert est[0] > est[2]

@@ -82,6 +82,99 @@ def test_hierarchical_reduces_global_ranks():
     assert hier.makespan < flat.makespan
 
 
+def test_cross_stealing_beats_static_segments_on_straggler_segment():
+    """The tentpole scenario: one rank's stretch is ~6x as expensive.
+    Within-rank stealing cannot help (the whole rank is slow); shared
+    inter-rank gaps let neighbours absorb boundary elements, cutting both
+    phase 1 and the makespan."""
+    n, ranks, threads = 4096, 8, 12
+    per = n // ranks
+    costs = np.full(n, 10.0)
+    costs[2 * per: 3 * per] *= 6.0
+    stat = simulate_distributed_scan(costs, ranks=ranks, threads=threads,
+                                     stealing=True)
+    cross = simulate_distributed_scan(costs, ranks=ranks, threads=threads,
+                                      stealing=True, cross_stealing=True)
+    assert cross.cross_steals > 0
+    assert cross.phase1_end < stat.phase1_end
+    assert cross.makespan < stat.makespan
+    assert stat.cross_steals == 0
+
+
+def test_cross_stealing_conserves_work():
+    """Same phase structure => identical operator-application counts: the
+    shared gaps move work between workers, they never duplicate it."""
+    costs = exponential_costs(1024, mean=1.0)
+    a = simulate_distributed_scan(costs, ranks=8, threads=4, stealing=True)
+    b = simulate_distributed_scan(costs, ranks=8, threads=4, stealing=True,
+                                  cross_stealing=True)
+    assert a.work == b.work
+
+
+def test_cross_stealing_boundaries_partition():
+    from repro.core.simulator import _simulate_cross_stealing_reduce
+
+    costs = exponential_costs(512, mean=1.0)
+    fin_per, busy_per, ops, bnds_per, cross = _simulate_cross_stealing_reduce(
+        costs, 4, 4
+    )
+    flat = [iv for bnds in bnds_per for iv in bnds]
+    covered = sorted(i for lo, hi in flat for i in range(lo, hi + 1))
+    assert covered == list(range(512))
+    for (_, h1), (l2, _) in zip(flat, flat[1:]):
+        assert l2 == h1 + 1
+    assert ops == 512 - len(flat)  # every non-start element costs one op
+
+
+def test_cross_stealing_clamps_threads_on_tiny_ranks():
+    """per-rank segments too small for the requested thread count: the
+    cross reduce clamps workers per segment (host rule) and still produces
+    a correct partition instead of crashing."""
+    from repro.core.simulator import _simulate_cross_stealing_reduce
+
+    costs = constant_costs(16, 1.0)
+    res = _simulate_cross_stealing_reduce(costs, 8, 4)
+    assert res is not None
+    fin_per, busy_per, ops, bnds_per, cross = res
+    flat = [iv for bnds in bnds_per for iv in bnds]
+    covered = sorted(i for lo, hi in flat for i in range(lo, hi + 1))
+    assert covered == list(range(16))
+    assert all(len(f) == 1 for f in fin_per)  # clamped to 1 worker/segment
+
+
+def test_cross_stealing_infeasible_falls_back_like_host(monkeypatch):
+    """When seating is infeasible (cross reduce returns None — the host's
+    static-segment fallback path), the simulator must degrade to the
+    per-rank reduce, not crash."""
+    import repro.core.simulator as sim
+
+    monkeypatch.setattr(
+        sim, "_simulate_cross_stealing_reduce", lambda *a, **k: None
+    )
+    costs = exponential_costs(512, mean=1.0)
+    a = simulate_distributed_scan(costs, ranks=8, threads=4, stealing=True)
+    b = simulate_distributed_scan(costs, ranks=8, threads=4, stealing=True,
+                                  cross_stealing=True)
+    assert b.cross_steals == 0
+    assert b.makespan == a.makespan and b.work == a.work
+
+
+def test_phase3_waits_for_own_phase1():
+    """Accounting fix: a rank's apply cannot start before its own phase 1
+    completes.  With the straggler as the *last* rank (no downstream ranks
+    to mask it) the old seed-only timing finished phase 3 before phase 1
+    ended — physically impossible."""
+    n, ranks, threads = 2048, 4, 12
+    per = n // ranks
+    costs = np.full(n, 10.0)
+    costs[(ranks - 1) * per:] *= 6.0
+    r = simulate_distributed_scan(costs, ranks=ranks, threads=threads,
+                                  stealing=True)
+    # The straggler finishes phase 1 at phase1_end and must still apply
+    # its whole (expensive) share afterwards.
+    assert r.makespan > r.phase1_end + per * 60.0 / threads * 0.5
+
+
 def test_bounds_monotone():
     for p in [64, 128, 256, 512, 1024]:
         assert theoretical_bound_scan(4096, p) < theoretical_bound_scan(4096, 2 * p)
