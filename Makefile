@@ -31,13 +31,16 @@ bench:
 bench-smoke:
 	$(PY) benchmarks/bench_scan_kernels.py --smoke --json BENCH_ci.json
 	$(PY) benchmarks/bench_registration_e2e.py --smoke --json BENCH_e2e_ci.json
+	$(PY) benchmarks/bench_serve.py --smoke --json BENCH_serve_ci.json
 	$(PY) benchmarks/compare_baseline.py BENCH_ci.json benchmarks/baselines/BENCH_ci.json
 	$(PY) benchmarks/compare_baseline.py BENCH_e2e_ci.json benchmarks/baselines/BENCH_e2e_ci.json
+	$(PY) benchmarks/compare_baseline.py BENCH_serve_ci.json benchmarks/baselines/BENCH_serve_ci.json
 
 # Refresh the committed bench baselines from this machine's smoke run.
 bench-baseline:
 	$(PY) benchmarks/bench_scan_kernels.py --smoke --json benchmarks/baselines/BENCH_ci.json
 	$(PY) benchmarks/bench_registration_e2e.py --smoke --json benchmarks/baselines/BENCH_e2e_ci.json
+	$(PY) benchmarks/bench_serve.py --smoke --json benchmarks/baselines/BENCH_serve_ci.json
 
 # Everything .github/workflows/ci.yml gates on, in one local target.
 ci: lint test-fast bench-smoke

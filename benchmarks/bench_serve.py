@@ -1,0 +1,272 @@
+"""Serving benchmark: the resident runtime vs per-call thread armies.
+
+Two scenarios, both gated in CI through relative baselines only:
+
+1. **Concurrent series throughput** — K client threads each scan a stream
+   of straggler-profile series (the paper's imbalanced operator).  The
+   operator is a GIL-holding busy-wait: a stand-in for a *fully
+   subscribed* host, where aggregate throughput is bounded by total
+   operator work (any work-conserving scheduler ties on wall-clock, so
+   what differentiates runtimes under saturation is how much work they
+   schedule and how much overhead they add).
+
+   * ``percall`` — the pre-runtime behaviour: every scan call is
+     dispatched as if it owned the machine (hierarchical segments x
+     threads) and spawns fresh OS threads via a :class:`TransientPool`.
+     Reduce-then-scan costs ~2.2N applications per series for parallelism
+     a saturated host cannot deliver, plus per-call thread churn.
+   * ``shared`` — all clients scan on one :class:`WorkerPool` with
+     cost-model dispatch: tenancy shrinks each series' worker budget and
+     pool occupancy shifts saturated-pool series to the work-optimal
+     N-1-application sequential chain (``engine/cost.py``).
+
+   Gate: shared-pool throughput >= 1.5x per-call at K=4, n=256 (the
+   headroom is the ~2.2x work ratio; thread churn adds to it).
+
+2. **Incremental extend vs full recompute** — ``session.extend`` of a
+   32-frame suffix onto a 256-frame series (real registration pipeline,
+   deterministic compose path) against re-running ``register_series`` on
+   all 288 frames.  The session retains the cumulative element, so the
+   extend pays 32 function-A pairs + a seeded suffix scan; the recompute
+   pays 287.  Gate: >= 3x.
+
+CLI:  PYTHONPATH=src python benchmarks/bench_serve.py [--smoke] [--json out]
+"""
+
+from __future__ import annotations
+
+import math
+import threading
+import time
+
+CLIENTS = 4
+SEGMENTS, SEG_THREADS = 4, 2
+BASE_SPIN = 0.0004          # seconds of busy-wait per operator application
+STRAGGLER = lambda n: min(50.0, n / 5.0)
+
+
+# --- mock scan elements: rigid transform + index pair + spin tag (same
+# element shape as bench_registration_e2e; the op *burns CPU holding the
+# GIL* instead of sleeping — see the module docstring for why).
+
+
+def _rigid_compose(a, b):
+    ang = a[0] + b[0]
+    c, s = math.cos(b[0]), math.sin(b[0])
+    return (ang, c * a[1] - s * a[2] + b[1], s * a[1] + c * a[2] + b[2])
+
+
+def _elements(n, delays):
+    return [
+        ((0.001 * (i % 7), 0.3 * ((i % 5) - 2), 0.2 * ((i % 3) - 1)),
+         i, i + 1, delays[i])
+        for i in range(n)
+    ]
+
+
+def _straggler_delays(n, base=BASE_SPIN):
+    d = [base] * n
+    d[n // 2] = base * STRAGGLER(n)
+    return d
+
+
+def _spin(seconds: float) -> None:
+    t_end = time.perf_counter() + seconds
+    while time.perf_counter() < t_end:
+        pass
+
+
+class _SpinOp:
+    """Mock function B: compose + busy-wait, with a cost estimate exposed
+    so the dispatcher sees an expensive operator (as the telemetered
+    RegistrationOperator would report).
+
+    The advertised estimate is the *cost class* of the real operator
+    (well above ``EXPENSIVE_OP_COST``) while the actual spin is scaled
+    ~25x down so CI smoke stays fast — dispatch decisions depend on the
+    class, the measured ratios only on relative work.  This matters: an
+    estimate below the expensive threshold would make the shared arm
+    sequential via the cheap-op fall-through and never touch the pool,
+    so the gate would stop covering tenancy/occupancy dispatch.
+    """
+
+    op_cost_estimate = 0.01     # >= engine.cost.EXPENSIVE_OP_COST
+
+    def __init__(self, base=BASE_SPIN):
+        self.base = base
+
+    def __call__(self, a, b):
+        _spin(max(a[3], b[3]))
+        assert a[2] == b[1], "non-adjacent combine"
+        return (_rigid_compose(a[0], b[0]), a[1], b[2], self.base)
+
+
+def _seq_scan(op, xs):
+    out = [xs[0]]
+    for x in xs[1:]:
+        out.append(op(out[-1], x))
+    return out
+
+
+def _check(ys, ref):
+    assert len(ys) == len(ref)
+    for y, r in zip(ys, ref):
+        assert y[1] == r[1] and y[2] == r[2]
+        assert all(abs(u - v) < 1e-9 for u, v in zip(y[0], r[0]))
+
+
+# ------------------------------------------------ 1. concurrent throughput
+
+
+def _run_clients(n, series_per_client, scan_one):
+    """K client threads, each scanning ``series_per_client`` series
+    back-to-back; returns elapsed wall seconds for all of them."""
+    errs = []
+
+    def client(cid):
+        try:
+            for _ in range(series_per_client):
+                scan_one(cid)
+        except BaseException as e:  # noqa: BLE001 — surfaced below
+            errs.append(e)
+
+    threads = [
+        threading.Thread(target=client, args=(c,)) for c in range(CLIENTS)
+    ]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    elapsed = time.perf_counter() - t0
+    if errs:
+        raise errs[0]
+    return elapsed
+
+
+def _concurrent_rows(n, series_per_client):
+    from repro.core.engine import scan as engine_scan
+    from repro.runtime.scheduler import TransientPool, WorkerPool
+
+    delays = _straggler_delays(n)
+    ref = _seq_scan(
+        _SpinOp(0.0), [(t, i, k, 0.0) for t, i, k, _ in _elements(n, delays)]
+    )
+    ref = [(t, i, k) for t, i, k, _ in ref]
+
+    def verify(ys):
+        _check([(t, i, k) for t, i, k, _ in ys], ref)
+
+    # -- per-call: as-if-idle hierarchical dispatch, fresh threads per call.
+    transients = [TransientPool() for _ in range(CLIENTS)]
+
+    def percall(cid):
+        ys = engine_scan(
+            _SpinOp(), _elements(n, delays), backend="hierarchical",
+            num_segments=SEGMENTS, num_threads=SEG_THREADS,
+            pool=transients[cid],
+        )
+        verify(ys)
+
+    t_percall = _run_clients(n, series_per_client, percall)
+    spawned = sum(p.threads_spawned for p in transients)
+
+    # -- shared: one resident pool, cost-model dispatch with pool awareness.
+    pool = WorkerPool(name="bench-serve")
+
+    def shared(cid):
+        ys = engine_scan(_SpinOp(), _elements(n, delays), pool=pool)
+        verify(ys)
+
+    t_shared = _run_clients(n, series_per_client, shared)
+    resident = pool.num_workers
+    pool.shutdown()
+
+    total = CLIENTS * series_per_client
+    speedup = t_percall / t_shared
+    tag = f"k{CLIENTS}_n{n}"
+    return [
+        (f"serve_percall_{tag}", t_percall / total * 1e6,
+         f"series_per_s={total / t_percall:.2f};threads_spawned={spawned}"),
+        (f"serve_shared_{tag}", t_shared / total * 1e6,
+         f"series_per_s={total / t_shared:.2f};"
+         f"pool_speedup={speedup:.2f}x;"
+         f"meets_1p5x={speedup >= 1.5};"
+         f"resident_workers={resident}"),
+    ]
+
+
+# --------------------------------------- 2. incremental extend vs recompute
+
+
+def _extend_rows(n_base, n_ext, size):
+    import jax
+
+    import repro
+    from repro.data.images import make_series
+
+    frames, _ = make_series(
+        jax.random.PRNGKey(0), n_base + n_ext, size=size, noise=0.15
+    )
+    cfg = repro.RegisterSeriesConfig(refine=False)
+
+    # Warm both paths once so XLA compilation (per batch shape) is not in
+    # the timed region — a resident runtime has warm caches by definition.
+    repro.register_series(frames, cfg)
+    warm = repro.open_series(cfg)
+    warm.feed(frames[:n_base])
+    warm.extend(frames[n_base:])
+    warm.close()
+
+    t0 = time.perf_counter()
+    full = repro.register_series(frames, cfg)
+    t_full = time.perf_counter() - t0
+
+    session = repro.open_series(cfg)
+    session.feed(frames[:n_base])
+    session.result()
+    t0 = time.perf_counter()
+    incr = session.extend(frames[n_base:])
+    t_ext = time.perf_counter() - t0
+    session.close()
+
+    import numpy as np
+
+    agree = float(np.abs(
+        np.asarray(full.deformations["shift"])
+        - np.asarray(incr.deformations["shift"])
+    ).max())
+    speedup = t_full / t_ext
+    return [
+        (f"serve_recompute_f{n_base + n_ext}", t_full * 1e6, ""),
+        (f"serve_extend_f{n_base}p{n_ext}", t_ext * 1e6,
+         f"extend_speedup={speedup:.2f}x;"
+         f"meets_3x={speedup >= 3.0};"
+         f"vs_full_px={agree:.4f}"),
+    ]
+
+
+def run(*, smoke: bool = False):
+    # series_per_client > 1 amortizes the admission ramp: the first scan
+    # of each client can race to a parallel dispatch before all tenants
+    # are registered, which at one series per client dominates variance.
+    if smoke:
+        rows = _concurrent_rows(64, 3)
+        rows += _extend_rows(64, 8, 64)
+    else:
+        rows = _concurrent_rows(256, 3)
+        rows += _extend_rows(256, 32, 64)
+    return rows
+
+
+def main():
+    try:
+        from _cli import bench_cli          # script: python benchmarks/...
+    except ImportError:
+        from ._cli import bench_cli         # package: benchmarks.run
+
+    bench_cli("serve", run)
+
+
+if __name__ == "__main__":
+    main()

@@ -33,6 +33,12 @@ FLOORS = {
     # CI runners are noisy, so the hard floor sits below 1.3; the committed
     # baseline value (compared with RATIO_SLACK) carries the real target.
     "phase1_speedup": 1.15,
+    # Resident-runtime acceptance (bench_serve.py): shared pool >= 1.5x
+    # per-call threads at 4 concurrent series, incremental extend >= 3x a
+    # full recompute.  Floors again sit below the targets for runner noise;
+    # the committed baselines carry the real ratios.
+    "pool_speedup": 1.2,
+    "extend_speedup": 2.0,
 }
 RATIO_KEYS = ("speedup", "S'", "S_vs_static")
 

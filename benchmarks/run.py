@@ -17,6 +17,7 @@ from . import (
     bench_operator_cost,
     bench_registration_e2e,
     bench_scan_kernels,
+    bench_serve,
     bench_strong_scaling,
     bench_weak_scaling,
     bench_work_energy,
@@ -32,6 +33,7 @@ SUITES = {
     "operator_cost": bench_operator_cost,    # paper Fig. 5
     "registration_e2e": bench_registration_e2e,  # paper Figs. 1/9 (real time)
     "scan_kernels": bench_scan_kernels,      # in-model scan paths (real time)
+    "serve": bench_serve,                    # resident runtime / sessions
     "roofline": roofline,                    # dry-run roofline table
 }
 

@@ -4,17 +4,27 @@ Reproduction of arXiv 2010.12478 grown toward a production-scale JAX/Pallas
 system.  Public surface:
 
 * :func:`register_series` — end-to-end TEM series registration through the
-  unified scan engine (``repro.pipeline``).
+  unified scan engine, one-shot batch driver (``repro.pipeline``).
+* :func:`open_series` — persistent series sessions on the shared runtime:
+  ``session.feed(chunk)`` streaming ingest, ``session.extend(frames)``
+  incremental suffix folding, checkpoint/restore (``repro.service``).
 * :func:`scan` — the engine's generic prefix-scan entry point
   (``repro.core.engine``).
 
-Both are imported lazily so ``import repro`` stays dependency-light for
+All are imported lazily so ``import repro`` stays dependency-light for
 tooling that only needs submodules.
 """
 
 from typing import Any
 
-__all__ = ["RegisterSeriesConfig", "SeriesResult", "register_series", "scan"]
+__all__ = [
+    "RegisterSeriesConfig",
+    "SeriesResult",
+    "SeriesSession",
+    "open_series",
+    "register_series",
+    "scan",
+]
 
 
 def __getattr__(name: str) -> Any:
@@ -22,6 +32,10 @@ def __getattr__(name: str) -> Any:
         from . import pipeline
 
         return getattr(pipeline, name)
+    if name in ("open_series", "SeriesSession"):
+        from . import service
+
+        return getattr(service, name)
     if name == "scan":
         from .core.engine import scan
 

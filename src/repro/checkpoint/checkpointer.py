@@ -104,13 +104,16 @@ class Checkpointer:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
-    def restore(
-        self, target_tree, *, step: Optional[int] = None, shardings=None
-    ):
-        """Restore into the structure of ``target_tree``.
+    def restore_raw(
+        self, *, step: Optional[int] = None
+    ) -> Tuple[Dict[str, np.ndarray], Dict, int]:
+        """Read a checkpoint without a target prototype.
 
-        ``shardings``: optional pytree of jax.sharding.Sharding — arrays are
-        device_put against it (reshard-on-restore / elastic rescale)."""
+        Returns ``(arrays_by_key, metadata, step)`` with shapes/dtypes as
+        stored.  Used by consumers whose state *structure* depends on the
+        checkpoint itself — a series session resuming mid-series does not
+        know how many frames the snapshot covers until it reads it.
+        """
         step = self.latest_step() if step is None else step
         if step is None:
             raise FileNotFoundError(f"no checkpoints under {self.dir}")
@@ -119,6 +122,16 @@ class Checkpointer:
             manifest = json.load(f)
         data = np.load(os.path.join(path, "arrays.npz"))
         by_key = {k: data[f"a{i}"] for i, k in enumerate(manifest["keys"])}
+        return by_key, manifest["metadata"], step
+
+    def restore(
+        self, target_tree, *, step: Optional[int] = None, shardings=None
+    ):
+        """Restore into the structure of ``target_tree``.
+
+        ``shardings``: optional pytree of jax.sharding.Sharding — arrays are
+        device_put against it (reshard-on-restore / elastic rescale)."""
+        by_key, metadata, step = self.restore_raw(step=step)
 
         flat, treedef = jax.tree_util.tree_flatten_with_path(target_tree)
         shard_flat = (
@@ -137,4 +150,4 @@ class Checkpointer:
             arr = arr.astype(proto.dtype)
             leaves.append(jax.device_put(arr, shd) if shd is not None else jax.device_put(arr))
         tree = jax.tree_util.tree_unflatten(treedef, leaves)
-        return tree, manifest["metadata"], step
+        return tree, metadata, step

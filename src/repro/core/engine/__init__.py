@@ -34,7 +34,7 @@ the inclusive prefix scan in the same container type.
 
 from __future__ import annotations
 
-from typing import Any, Callable, Optional, Sequence
+from typing import Any, Callable, List, Optional, Sequence
 
 from .backends import (
     available_backends,
@@ -44,13 +44,17 @@ from .backends import (
     lowered_cache,
     register_backend,
 )
+from repro.runtime.scheduler import get_default_pool
+
 from .cost import (
     CHEAP_OP_COST,
     CROSS_STEAL_MIN_IMBALANCE,
     EXPENSIVE_OP_COST,
+    POOL_BUSY_OCCUPANCY,
     Dispatch,
     dispatch,
     measure_op_cost,
+    pool_aware_workers,
 )
 from .plan import ExecutionPlan, PlanRound, get_plan, lower, plan_cache
 from .telemetry import (
@@ -59,6 +63,7 @@ from .telemetry import (
     get_telemetry,
     op_cost_from,
     op_imbalance_from,
+    release_telemetry,
 )
 
 # Registers the "pallas" and "hierarchical" backends on import.
@@ -71,6 +76,10 @@ __all__ = [
     "CHEAP_OP_COST",
     "CROSS_STEAL_MIN_IMBALANCE",
     "EXPENSIVE_OP_COST",
+    "POOL_BUSY_OCCUPANCY",
+    "pool_aware_workers",
+    "get_default_pool",
+    "release_telemetry",
     "scan",
     "lower",
     "get_plan",
@@ -149,6 +158,8 @@ def scan(
     interpret: Optional[bool] = None,
     use_pallas: Optional[bool] = None,
     workers: Optional[int] = None,
+    seed: Any = None,
+    pool=None,
 ):
     """Inclusive prefix scan of ``xs`` with associative ``op``.
 
@@ -158,6 +169,20 @@ def scan(
     mask — False elements are treated as the operator identity (they never
     reach ``op``); positions before the first True element pass through
     unchanged.
+
+    ``seed`` (element domain): an element logically preceding ``xs[0]`` —
+    the scan returns the prefixes of ``[seed] + xs`` without the seed
+    itself.  This is the incremental-extension primitive: a series session
+    folds a new suffix in by seeding with the retained running total
+    (O(new) operator applications instead of recomputing the prefix).
+
+    ``pool`` (element domain): the :class:`~repro.runtime.scheduler`
+    worker pool the threaded backends execute on (process-wide shared pool
+    by default).  Each element-domain scan is admitted as a pool *tenant*
+    for its duration; the dispatcher reads the pool's occupancy and tenant
+    count, so concurrent series shrink each other's planned parallelism
+    and a saturated pool shifts small series to the work-optimal
+    sequential chain instead of queueing (``cost.POOL_BUSY_OCCUPANCY``).
 
     Backend-specific options: ``num_blocks``/``strategy`` (blocked, pallas
     tiles), ``num_threads``/``stealing`` (worksteal), ``num_segments``/
@@ -169,7 +194,69 @@ def scan(
     :class:`ExecutionPlan`, cached across calls.
     """
     element_domain = isinstance(xs, list)
+    if seed is not None and (not element_domain or backend == "collective"):
+        raise NotImplementedError("seed= is supported in the element domain "
+                                  "only (worksteal/hierarchical/element)")
+    if element_domain and backend != "collective":
+        if pool is None:
+            pool = get_default_pool()
+        with pool.tenant():
+            return _scan_impl(
+                op, xs, element_domain,
+                where=where, backend=backend, algorithm=algorithm,
+                op_cost=op_cost, measure=measure, num_blocks=num_blocks,
+                num_threads=num_threads, num_segments=num_segments,
+                strategy=strategy, axis_name=axis_name, axis_size=axis_size,
+                stealing=stealing, cross_steal=cross_steal,
+                element_costs=element_costs, interpret=interpret,
+                use_pallas=use_pallas, workers=workers, seed=seed, pool=pool,
+            )
+    return _scan_impl(
+        op, xs, element_domain,
+        where=where, backend=backend, algorithm=algorithm, op_cost=op_cost,
+        measure=measure, num_blocks=num_blocks, num_threads=num_threads,
+        num_segments=num_segments, strategy=strategy, axis_name=axis_name,
+        axis_size=axis_size, stealing=stealing, cross_steal=cross_steal,
+        element_costs=element_costs, interpret=interpret,
+        use_pallas=use_pallas, workers=workers, seed=seed, pool=pool,
+    )
 
+
+def _seeded_chain(op: Op, xs: Sequence[Any], seed: Any) -> list:
+    """Work-optimal sequential chain over ``xs`` seeded with ``seed``."""
+    out: List[Any] = []
+    acc = seed
+    for x in xs:
+        acc = x if acc is None else op(acc, x)
+        out.append(acc)
+    return out
+
+
+def _scan_impl(
+    op: Op,
+    xs,
+    element_domain: bool,
+    *,
+    where,
+    backend,
+    algorithm,
+    op_cost,
+    measure,
+    num_blocks,
+    num_threads,
+    num_segments,
+    strategy,
+    axis_name,
+    axis_size,
+    stealing,
+    cross_steal,
+    element_costs,
+    interpret,
+    use_pallas,
+    workers,
+    seed,
+    pool,
+):
     # --- collective: SPMD over a mesh axis; xs is this device's element.
     if backend == "collective":
         if axis_name is None:
@@ -191,9 +278,15 @@ def scan(
     if n == 0:
         return xs
     if n == 1:
+        if element_domain and seed is not None:
+            return [op(seed, xs[0])]
         return list(xs) if element_domain else xs
 
     # --- dispatch
+    if element_domain and workers is None:
+        # Fair-share sizing: concurrent tenants on the shared pool divide
+        # the machine instead of each planning a full-size thread army.
+        workers = pool_aware_workers(pool, workers)
     if backend is None:
         cost = op_cost
         if cost is None:
@@ -203,9 +296,13 @@ def scan(
             cost = op_cost_from(op)
         if cost is None and measure:
             cost = measure_op_cost(op, xs)
+        occupancy = (
+            pool.occupancy() if element_domain and pool is not None else None
+        )
         d = dispatch(n, domain="element" if element_domain else "array",
                      op_cost=cost, workers=workers,
-                     op_imbalance=op_imbalance_from(op))
+                     op_imbalance=op_imbalance_from(op),
+                     pool_occupancy=occupancy)
         backend = d.backend
         if where is not None and backend in ("blocked", "worksteal",
                                              "hierarchical"):
@@ -247,7 +344,8 @@ def scan(
                                          "brent_kung", "sklansky",
                                          "sequential") else "dissemination"
         plan = get_plan(alg, t) if t > 1 else None
-        ys, _ = fn(op, plan, xs, num_threads=t, stealing=stealing)
+        ys, _ = fn(op, plan, xs, num_threads=t, stealing=stealing, seed=seed,
+                   pool=pool)
         return ys
     if backend == "hierarchical":
         # Two-level reduce-then-scan; the plan covers the cross-segment phase.
@@ -270,7 +368,7 @@ def scan(
         ys, _ = fn(op, plan, xs, num_segments=s, num_threads=t,
                    stealing=stealing, cross_steal=cross_steal,
                    element_costs=element_costs, interpret=interpret,
-                   use_pallas=use_pallas)
+                   use_pallas=use_pallas, seed=seed, pool=pool)
         return ys
     if backend == "pallas" and num_blocks is not None and num_blocks > 1:
         # Tiles mode: the plan covers the global phase over tile totals.
@@ -279,6 +377,19 @@ def scan(
         plan = get_plan(algorithm, num_blocks)
         ys, _ = fn(op, plan, xs, interpret=interpret)
         return ys
+
+    # --- seeded element execution without a decomposition backend: the
+    # work-optimal chain (a flat circuit cannot consume a seed without
+    # multiplying applications, defeating the seed's purpose).
+    if seed is not None:
+        if backend != "element":
+            raise NotImplementedError(
+                f"seed= is not supported by the {backend!r} backend; use "
+                "element, worksteal or hierarchical"
+            )
+        if where is not None:
+            raise NotImplementedError("seed= cannot be combined with where=")
+        return _seeded_chain(op, xs, seed)
 
     # --- flat circuit execution (vector / element / pallas-rounds / simulate)
     mask = list(where) if where is not None else None

@@ -321,17 +321,19 @@ def exec_worksteal(
     num_threads: Optional[int] = None,
     stealing: bool = True,
     seed: Any = None,
+    pool=None,
     **_,
 ) -> Tuple[list, Any]:
     """Threaded reduce-then-scan (Algorithm 1); ``plan`` is the phase-2
-    circuit over the thread partials (its width == num_threads)."""
+    circuit over the thread partials (its width == num_threads); ``pool``
+    the scheduler phases 1/3 run on (shared process pool by default)."""
     from ..work_stealing import work_stealing_scan
 
     t = num_threads if num_threads is not None else plan.n
     ys, _stats = work_stealing_scan(
         op, list(xs), t,
         plan=plan if plan is not None and plan.n == t else None,
-        stealing=stealing, seed=seed,
+        stealing=stealing, seed=seed, pool=pool,
     )
     return ys, None
 

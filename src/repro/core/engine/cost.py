@@ -58,6 +58,18 @@ HIER_SEGMENT_THREADS = 4  # stealing threads per segment (paper: cores/node)
 # dispatcher keeps it on as cheap insurance (the gaps go idle if unneeded).
 CROSS_STEAL_MIN_IMBALANCE = 1.5
 
+# Pool-occupancy awareness (the resident runtime, runtime/scheduler.py).
+# Under saturation the scheduler is work-conserving: aggregate throughput
+# across concurrent series is bounded by total operator *work*, and
+# reduce-then-scan trades ~2.5N applications for parallelism a saturated
+# pool cannot deliver.  At or past this occupancy (demand / capacity), a
+# small expensive-op series therefore runs the work-optimal sequential
+# chain in its caller's thread instead of queueing a thread army.
+POOL_BUSY_OCCUPANCY = 1.0
+# ... but only *small* series: a huge series under a transiently busy pool
+# still wants parallel latency once the backlog drains.
+POOL_BUSY_MAX_N = 1024
+
 
 @dataclasses.dataclass(frozen=True)
 class Dispatch:
@@ -107,6 +119,23 @@ def _default_workers() -> int:
     return max(os.cpu_count() or 1, 1)
 
 
+def pool_aware_workers(pool, workers: Optional[int]) -> Optional[int]:
+    """Effective worker budget for one scan sharing ``pool`` with others.
+
+    An explicit ``workers`` hint always wins.  Otherwise the machine's
+    cores are divided fairly among the pool's admitted tenants (element-
+    domain scans currently in flight, the caller included when it has
+    already entered ``pool.tenant()``): four concurrent series on an
+    8-core host each plan for 2 workers instead of all four planning an
+    8-thread army.  With a single tenant this is exactly the old
+    core-count default.
+    """
+    if workers is not None or pool is None:
+        return workers
+    tenants = max(1, pool.tenants())
+    return max(1, _default_workers() // tenants)
+
+
 def _largest_divisor_at_most(n: int, cap: int) -> int:
     for p in range(min(cap, n), 0, -1):
         if n % p == 0:
@@ -121,6 +150,7 @@ def dispatch(
     op_cost: Optional[float] = None,
     workers: Optional[int] = None,
     op_imbalance: Optional[float] = None,
+    pool_occupancy: Optional[float] = None,
 ) -> Dispatch:
     """Pick backend + circuit + block size for one scan call.
 
@@ -131,6 +161,12 @@ def dispatch(
     ``op_imbalance``: observed max/mean per-call cost ratio (operator
     telemetry); decides whether cross-segment stealing is worth its shared
     boundary gaps.  None means unobserved — stealing stays on as insurance.
+    ``pool_occupancy``: the shared worker pool's demand/capacity ratio
+    (``WorkerPool.occupancy()``).  At/above ``POOL_BUSY_OCCUPANCY`` a small
+    expensive-op element series runs the work-optimal sequential chain
+    instead of queueing parallel phases behind other tenants' tasks (the
+    array-domain backends never touch the pool, so nothing shifts there —
+    vector/blocked already are the non-queueing choice).
     """
     if n <= 1:
         return Dispatch("element" if domain == "element" else "vector",
@@ -139,6 +175,23 @@ def dispatch(
     cost = op_cost if op_cost is not None else 0.0
 
     if domain == "element":
+        if (
+            cost >= EXPENSIVE_OP_COST
+            and pool_occupancy is not None
+            and pool_occupancy >= POOL_BUSY_OCCUPANCY
+            and n <= POOL_BUSY_MAX_N
+        ):
+            # Saturated runtime: parallel phases would only queue, and
+            # reduce-then-scan pays ~2.5N applications for parallelism the
+            # pool cannot deliver right now.  The N-1-application chain in
+            # the caller's own thread is the throughput-optimal choice.
+            return Dispatch(
+                "element", "sequential",
+                strategy="sequential",
+                reason=f"pool saturated (occupancy {pool_occupancy:.2f} >= "
+                       f"{POOL_BUSY_OCCUPANCY}) -> work-optimal sequential "
+                       "chain instead of queueing",
+            )
         if cost >= EXPENSIVE_OP_COST and w >= HIER_MIN_WORKERS and n >= 2 * w:
             # Paper §4.2: at nodes × cores scale, two-level reduce-then-scan —
             # stealing within segments, a tiny cross-segment scan between.

@@ -13,9 +13,11 @@ Two domains, same phase structure:
 
 * **element** (Python list, expensive opaque operator — the registration
   operator): phase 1 runs ``work_stealing.stealing_reduce`` per segment, all
-  segments concurrently; phase 3 runs seeded sequential applies, one thread
-  per stolen interval.  This is the host-level twin of the paper's
-  MPI-nodes × OpenMP-threads deployment.
+  segments concurrently; phase 3 runs seeded sequential applies, one pool
+  task per stolen interval.  Both phases execute on the injected
+  :mod:`repro.runtime.scheduler` pool (shared process-wide pool by
+  default) — no threads are spawned here.  This is the host-level twin of
+  the paper's MPI-nodes × OpenMP-threads deployment.
 * **array** (pytree of arrays, vectorizable operator): phase 1/3 are
   vectorized segment scans/applies (``vmap`` + broadcast combine), routed
   through the fused Pallas tile kernels (``kernels/tile_scan.py``) when the
@@ -31,9 +33,11 @@ pipeline's stage report.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
-from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.runtime.scheduler import get_default_pool
 
 from .backends import exec_element, exec_vector, register_backend
 from .plan import ExecutionPlan, get_plan
@@ -98,6 +102,7 @@ def _exec_hier_element(
     seed: Any,
     cross_steal: Optional[bool] = None,
     element_costs: Optional[Sequence[float]] = None,
+    pool=None,
 ) -> Tuple[list, Any]:
     from ..work_stealing import (
         _Gap,
@@ -109,6 +114,8 @@ def _exec_hier_element(
     from .telemetry import OpTelemetry, element_costs_from
 
     global last_stats
+    if pool is None:
+        pool = get_default_pool()
     n = len(xs)
     s = max(1, min(num_segments, n))
     t = max(1, num_threads)
@@ -145,7 +152,7 @@ def _exec_hier_element(
         t_eff = min(t, ln // 2)
         if t_eff >= 2:
             fn = stealing_reduce if stealing else static_reduce
-            partials, st = fn(op, seg, t_eff)
+            partials, st = fn(op, seg, t_eff, pool=pool)
             intervals = [(lo + a, lo + b) for a, b in st.boundaries]
             reduce_ops = st.total_ops
         else:
@@ -190,6 +197,7 @@ def _exec_hier_element(
                     seg_tel[i + 1].estimate if i < s - 1 else None,
                 ),
                 record=seg_tel[i].record,
+                pool=pool,
             )
             pscan = [partials[0]]
             for p in partials[1:]:
@@ -198,15 +206,19 @@ def _exec_hier_element(
 
     t0 = time.perf_counter()
     if cross:
-        with ThreadPoolExecutor(max_workers=s) as pool:
-            seg_results = list(pool.map(reduce_segment_cross, range(s)))
+        seg_results = pool.run_tasks(
+            [functools.partial(reduce_segment_cross, i) for i in range(s)],
+            label="hier_reduce_cross",
+        )
         # Boundaries moved with the steals: report the segments' final spans.
         bounds = [(r[1][0][0], r[1][-1][1]) for r in seg_results]
     elif s == 1:
         seg_results = [reduce_segment(*bounds[0])]
     else:
-        with ThreadPoolExecutor(max_workers=s) as pool:
-            seg_results = list(pool.map(lambda b: reduce_segment(*b), bounds))
+        seg_results = pool.run_tasks(
+            [functools.partial(reduce_segment, lo, hi) for lo, hi in bounds],
+            label="hier_reduce",
+        )
     phase["reduce"] = time.perf_counter() - t0
     for _pscan, _intervals, _st, seg_ops in seg_results:
         ops_count += seg_ops
@@ -256,8 +268,12 @@ def _exec_hier_element(
     if len(jobs) == 1:
         ops_count += apply_interval(jobs[0])
     else:
-        with ThreadPoolExecutor(max_workers=len(jobs)) as pool:
-            ops_count += sum(pool.map(apply_interval, jobs))
+        ops_count += sum(
+            pool.run_tasks(
+                [functools.partial(apply_interval, j) for j in jobs],
+                label="hier_apply",
+            )
+        )
     phase["apply"] = time.perf_counter() - t0
 
     last_stats = HierStats(
@@ -378,6 +394,7 @@ def exec_hierarchical(
     element_costs: Optional[Sequence[float]] = None,
     interpret: Optional[bool] = None,
     use_pallas: Optional[bool] = None,
+    pool=None,
     **_,
 ) -> Tuple[Any, Any]:
     """Two-level reduce-then-scan; ``plan`` covers the cross-segment phase.
@@ -388,6 +405,8 @@ def exec_hierarchical(
     boundary gaps; default on where feasible); ``element_costs`` is an
     optional per-element cost prior for ahead-of-time segment sizing
     (otherwise read from the operator's telemetry, if it has any).
+    ``pool`` is the scheduler segment reduces and interval applies run on
+    (element domain; the process-wide shared pool by default).
     """
     s = num_segments if num_segments is not None else (plan.n if plan else 1)
     if isinstance(xs, list):
@@ -401,6 +420,7 @@ def exec_hierarchical(
             seed=seed,
             cross_steal=cross_steal,
             element_costs=element_costs,
+            pool=pool,
         )
     if seed is not None:
         raise NotImplementedError(

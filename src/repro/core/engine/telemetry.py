@@ -86,13 +86,34 @@ _registry: Dict[str, OpTelemetry] = {}
 _registry_lock = threading.Lock()
 
 
-def get_telemetry(name: str) -> OpTelemetry:
-    """Process-wide named telemetry channel (benchmarks read these back)."""
+def _channel_key(name: str, session: Optional[str]) -> str:
+    return name if session is None else f"{session}:{name}"
+
+
+def get_telemetry(name: str, *, session: Optional[str] = None) -> OpTelemetry:
+    """Named telemetry channel (benchmarks and sessions read these back).
+
+    ``session`` namespaces the channel: two concurrent series sessions
+    whose operators share a bare name (the default ``registration_B``)
+    must not share cost/imbalance EMAs — a 2048-frame series would poison
+    a 16-frame one's dispatch.  Anonymous callers (no session) fall back
+    to the process-global channel, preserving the accumulate-across-runs
+    behaviour benchmarks rely on.
+    """
+    key = _channel_key(name, session)
     with _registry_lock:
-        tel = _registry.get(name)
+        tel = _registry.get(key)
         if tel is None:
-            tel = _registry[name] = OpTelemetry(name=name)
+            tel = _registry[key] = OpTelemetry(name=key)
         return tel
+
+
+def release_telemetry(name: str, *, session: Optional[str] = None) -> None:
+    """Drop a channel from the registry (session close — long-lived
+    processes would otherwise accumulate one channel per finished series).
+    Unknown channels are ignored."""
+    with _registry_lock:
+        _registry.pop(_channel_key(name, session), None)
 
 
 def op_cost_from(op) -> Optional[float]:

@@ -59,30 +59,47 @@ def _minimize_level(
     init: Deformation,
     cfg: RegistrationConfig,
 ) -> Tuple[Deformation, jax.Array, jax.Array]:
-    """Gradient flow on one pyramid level with data-dependent stopping."""
+    """Gradient flow on one pyramid level with data-dependent stopping.
+
+    The loop is *per-lane frozen*: under ``vmap`` a batched ``while_loop``
+    keeps executing the body until every lane converges, and an unguarded
+    body would keep stepping lanes that already met the tolerance — making
+    a pair's result depend on which batch it was registered with (chunked
+    streaming ingest would diverge from batch ingest) and making the
+    per-lane iteration count read the cohort maximum instead of the
+    lane's own cost.  ``active`` masks the update, so every lane follows
+    exactly its solo trajectory regardless of cohort.
+    """
 
     loss = lambda d: ncc_distance(ref, tmpl, d)
     grad = jax.grad(loss)
 
-    def cond(state):
-        d, prev, cur, it = state
+    def active_of(state):
+        _, prev, cur, it = state
         return jnp.logical_and(it < cfg.max_iters, jnp.abs(prev - cur) > cfg.tol)
 
     def body(state):
         d, prev, cur, it = state
+        act = active_of(state)
         g = grad(d)
         ang_step = cfg.lr_angle if cfg.estimate_rotation else 0.0
-        d = {
+        d_new = {
             "angle": d["angle"] - ang_step * g["angle"],
             "shift": d["shift"] - cfg.lr_shift * g["shift"],
         }
-        new = loss(d)
-        return (d, cur, new, it + 1)
+        new = loss(d_new)
+        keep = lambda nv, ov: jnp.where(act, nv, ov)
+        return (
+            jax.tree.map(keep, d_new, d),
+            keep(cur, prev),
+            keep(new, cur),
+            it + act.astype(jnp.int32),
+        )
 
     d0 = init
     l0 = loss(d0)
     state = (d0, l0 + 1.0, l0, jnp.zeros((), jnp.int32))
-    d, _, final, iters = jax.lax.while_loop(cond, body, state)
+    d, _, final, iters = jax.lax.while_loop(active_of, body, state)
     return d, final, iters
 
 

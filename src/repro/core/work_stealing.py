@@ -19,6 +19,12 @@ operator is expected to be expensive (seconds — image registration, or the
 paper's sleep-based mock operators), so Python-level synchronization overhead
 is negligible, exactly as MPI/OpenMP overhead was in the paper.
 
+Execution is routed through an injected :class:`~repro.runtime.scheduler`
+pool (the process-wide shared :func:`get_default_pool` unless the caller
+passes one): the executors here enqueue *worker tasks*, they never
+construct OS threads, so concurrent series multiplex fairly onto one
+resident runtime instead of each spawning a private thread army per call.
+
 The same protocol is *promoted to the segment level* by the hierarchical
 backend (``engine/hierarchical.py``): adjacent segments of a two-level
 reduce share boundary ``_Gap`` objects, their edge threads drain them
@@ -35,9 +41,12 @@ rebalancing) in ``runtime/straggler.py``.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import threading
 import time
 from typing import Any, Callable, List, Optional, Sequence, Tuple
+
+from repro.runtime.scheduler import get_default_pool
 
 from .engine.backends import exec_element
 from .engine.plan import ExecutionPlan, get_plan
@@ -204,6 +213,7 @@ def stealing_reduce(
     outer_rates: Tuple[Optional[Callable[[], Optional[float]]],
                        Optional[Callable[[], Optional[float]]]] = (None, None),
     record: Optional[Callable[[float], None]] = None,
+    pool=None,
 ) -> Tuple[List[Any], StealStats]:
     """Phase 1 of reduce-then-scan with work stealing (Algorithm 1).
 
@@ -228,6 +238,10 @@ def stealing_reduce(
     ``record``
         per-application duration callback feeding this segment's own rate
         EMA, so *its* neighbours can make the symmetric choice.
+    ``pool``
+        scheduler the worker tasks run on (shared process-wide
+        :class:`~repro.runtime.scheduler.WorkerPool` by default) — this
+        function enqueues tasks, it never spawns threads.
     """
     n = len(items)
     t = num_threads
@@ -313,11 +327,11 @@ def stealing_reduce(
         results[tid] = res
         st.finish_time = clock() - t0
 
-    threads = [threading.Thread(target=worker, args=(i,)) for i in range(t)]
-    for th in threads:
-        th.start()
-    for th in threads:
-        th.join()
+    if pool is None:
+        pool = get_default_pool()
+    pool.run_tasks(
+        [functools.partial(worker, i) for i in range(t)], label="steal_reduce"
+    )
     makespan = max(s.finish_time for s in stats)
     return results, StealStats(
         threads=stats,
@@ -333,6 +347,7 @@ def static_reduce(
     num_threads: int,
     *,
     clock: Callable[[], float] = time.monotonic,
+    pool=None,
 ) -> Tuple[List[Any], StealStats]:
     """Baseline: fixed even segments, no stealing (paper's 'static')."""
     n = len(items)
@@ -354,11 +369,11 @@ def static_reduce(
         results[tid] = res
         st.finish_time = clock() - t0
 
-    threads = [threading.Thread(target=worker, args=(i,)) for i in range(t)]
-    for th in threads:
-        th.start()
-    for th in threads:
-        th.join()
+    if pool is None:
+        pool = get_default_pool()
+    pool.run_tasks(
+        [functools.partial(worker, i) for i in range(t)], label="static_reduce"
+    )
     makespan = max(s.finish_time for s in stats)
     return results, StealStats(
         threads=stats,
@@ -377,6 +392,7 @@ def work_stealing_scan(
     stealing: bool = True,
     seed: Any = None,
     plan: Optional[ExecutionPlan] = None,
+    pool=None,
 ) -> Tuple[List[Any], StealStats]:
     """Full node-local reduce-then-scan with (optional) work stealing.
 
@@ -390,7 +406,8 @@ def work_stealing_scan(
 
     ``seed``: optional element logically preceding items[0] (used when this
     node is one rank of a distributed scan: the seed is the exclusive result
-    received from the global phase).
+    received from the global phase).  ``pool``: the scheduler phases 1 and 3
+    run on (process-wide shared pool by default).
     """
     n = len(items)
     if num_threads == 1:
@@ -402,8 +419,10 @@ def work_stealing_scan(
         st = ThreadStats(ops=n - (0 if seed is not None else 1), pl=0, pr=n - 1)
         return out, StealStats([st], 0.0, st.ops, [(0, n - 1)])
 
+    if pool is None:
+        pool = get_default_pool()
     reduce_fn = stealing_reduce if stealing else static_reduce
-    partials, stats = reduce_fn(op, items, num_threads)
+    partials, stats = reduce_fn(op, items, num_threads, pool=pool)
 
     # Phase 2: scan over partials with a precompiled circuit plan.
     if plan is None or plan.n != len(partials):
@@ -433,13 +452,10 @@ def work_stealing_scan(
             acc = items[j] if acc is None else op(acc, items[j])
             out[j] = acc
 
-    threads = [
-        threading.Thread(target=apply_worker, args=(i,)) for i in range(len(bounds))
-    ]
-    for th in threads:
-        th.start()
-    for th in threads:
-        th.join()
+    pool.run_tasks(
+        [functools.partial(apply_worker, i) for i in range(len(bounds))],
+        label="seeded_apply",
+    )
     stats.total_ops += sum(
         (hi - lo + 1) - (1 if s is None else 0)
         for (lo, hi), s in zip(bounds, seeds)

@@ -1,122 +1,61 @@
-"""End-to-end series registration through the unified scan engine.
+"""End-to-end series registration: the batch driver over the session runtime.
 
 ``register_series(frames, cfg)`` is the paper's full application (§2.3/§3/§5)
-as one driver:
+as one call.  Since the persistent-runtime refactor it is a thin driver over
+:mod:`repro.service`: it opens a :class:`~repro.service.SeriesSession` on
+the shared worker pool, feeds every chunk (prefetching
+``cfg.prefetch_depth`` chunks ahead so acquisition overlaps function-A
+preprocessing *and* the seeded suffix scan of the previous chunk), and
+returns ``session.result()``:
 
   ingest      frames arrive as an array or a *stream* of chunks
               (``data/images.py:stream_series`` — the parallel-filesystem
-              stand-in); streaming overlaps acquisition with preprocessing
+              stand-in)
   preprocess  function A on consecutive pairs, one batched (vmapped) XLA
               launch per chunk; its measured per-pair cost *primes* the
-              operator telemetry so the dispatcher has a cost estimate
-              before the first function-B application
-  scan        the engine scans the RegElements with the telemetered
-              Function-B adapter (``core/registration.py``): cost-model
-              dispatch by default — hierarchical / worksteal for the
-              expensive refining operator — or any explicit backend
+              session's operator telemetry
+  scan        each chunk's new elements are scanned *seeded* with the
+              retained cumulative element (cost-model dispatch with pool
+              awareness: hierarchical / worksteal for the expensive
+              refining operator, the work-optimal sequential chain when
+              the shared pool is saturated)
   compose     results are stacked into one batched Deformation pytree
-              (identity at frame 0), composed with a vectorized engine scan
-              when refinement is off (the exactly-associative cheap path)
+              (identity at frame 0)
 
-Every stage is timed; the result carries the report, the operator telemetry
-and the hierarchical executor's phase/steal statistics when that backend ran.
+Long-lived callers that want incremental extension, checkpoint/restore or
+explicit multi-tenancy should hold the session directly —
+``repro.open_series`` — instead of this one-shot wrapper.
+
+Note the streaming tradeoff the session model makes: chunked input is
+scanned *online* — one seeded scan per chunk, serialized by the seed
+dependency — so scan-phase parallelism is bounded by the chunk size while
+latency-to-first-result and suffix extension become O(chunk).  A caller
+holding the complete series who wants the widest possible single scan
+(segments x threads across all N-1 elements) should pass one (N, H, W)
+array: a single feed keeps the old batch behaviour exactly.
 """
 
 from __future__ import annotations
 
-import dataclasses
-import time
-from typing import Any, Dict, Iterable, List, Optional, Union
+from typing import Iterable, List, Union
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.deformation import Deformation, compose_batched, identity_deformation
-from repro.core.engine import scan as engine_scan
-from repro.core.registration import (
-    RegElement,
-    RegistrationConfig,
-    RegistrationOperator,
-    SeriesRegistrar,
-    register_pair,
+from repro.service import (  # noqa: F401 — canonical home; re-exported here
+    RegisterSeriesConfig,
+    SeriesResult,
+    SeriesSession,
 )
-
-
-@dataclasses.dataclass(frozen=True)
-class RegisterSeriesConfig:
-    """Knobs for :func:`register_series` (defaults follow the paper)."""
-
-    registration: RegistrationConfig = RegistrationConfig()
-    refine: bool = True                  # function B refinement (paper's B)
-    backend: Optional[str] = None        # None -> cost-model dispatch
-    algorithm: Optional[str] = None
-    num_segments: Optional[int] = None   # hierarchical: node-local segments
-    num_threads: Optional[int] = None    # threads (per segment, if hier)
-    stealing: bool = True
-    cross_steal: Optional[bool] = None   # inter-segment stealing; None ->
-                                         # dispatcher rule (telemetry imbalance)
-    workers: Optional[int] = None
-    skip_tol: Optional[float] = None     # fused guess check threshold
-    fused_ncc: Optional[bool] = None     # route checks through warp_ncc
-    telemetry_name: str = "registration_B"
-
-
-@dataclasses.dataclass
-class SeriesResult:
-    """Everything :func:`register_series` produces."""
-
-    deformations: Deformation            # batched phi_{0,i}, identity at i=0
-    elements: List[RegElement]           # scan output, N-1 entries
-    timings: Dict[str, float]            # per-stage seconds
-    backend: str                         # backend that executed the scan
-    op_telemetry: Dict[str, float]       # adapter cost statistics
-    scan_stats: Optional[Any] = None     # HierStats when hierarchical ran
-
-    @property
-    def n_frames(self) -> int:
-        return len(self.elements) + 1
-
-    def report(self) -> str:
-        lines = [
-            f"registered {self.n_frames} frames via backend={self.backend!r}"
-        ]
-        total = sum(self.timings.values())
-        for stage, secs in self.timings.items():
-            lines.append(f"  {stage:<12} {secs:8.3f}s")
-        lines.append(f"  {'total':<12} {total:8.3f}s")
-        tel = self.op_telemetry
-        if tel.get("calls"):
-            lines.append(
-                f"  operator: {tel['calls']:.0f} calls, "
-                f"mean {tel['mean_s'] * 1e3:.1f} ms, "
-                f"max {tel['max_s'] * 1e3:.1f} ms "
-                f"(imbalance {tel['imbalance']:.1f}x)"
-            )
-        if self.scan_stats is not None:
-            st = self.scan_stats
-            ph = st.phase_seconds
-            lines.append(
-                f"  hierarchical: {st.num_segments} segments x "
-                f"{st.threads_per_segment} threads; "
-                + ", ".join(f"{k}={v:.3f}s" for k, v in ph.items())
-            )
-            if getattr(st, "cross_steal", False):
-                per_seg = ",".join(str(k) for k in st.inter_segment_steals)
-                lines.append(
-                    "  cross-segment steals: "
-                    f"{st.total_inter_segment_steals()} "
-                    f"(per segment: {per_seg})"
-                    + ("; cost-history segment sizing"
-                       if st.rebalanced else "")
-                )
-        return "\n".join(lines)
 
 
 def _prefetched(chunks: Iterable, depth: int = 1):
     """Pull ``chunks`` on a background thread, ``depth`` ahead of the
     consumer — acquisition/rendering of chunk k+1 overlaps function-A
     preprocessing of chunk k (XLA releases the GIL during both).  Producer
-    exceptions re-raise at the consuming ``next()``.
+    exceptions re-raise at the consuming ``next()``.  ``depth`` must be
+    >= 1 (``RegisterSeriesConfig.prefetch_depth`` plumbs it through for
+    streaming ingest that wants more than one chunk in flight).
 
     The producer only ever blocks on the bounded queue *with a timeout*,
     re-checking a stop signal the consumer sets when the generator is
@@ -126,7 +65,9 @@ def _prefetched(chunks: Iterable, depth: int = 1):
     import queue
     import threading as _threading
 
-    q: queue.Queue = queue.Queue(maxsize=max(depth, 1))
+    if depth < 1:
+        raise ValueError(f"prefetch depth must be >= 1, got {depth}")
+    q: queue.Queue = queue.Queue(maxsize=depth)
     end = object()
     stop = _threading.Event()
     err: List[BaseException] = []
@@ -163,196 +104,30 @@ def _prefetched(chunks: Iterable, depth: int = 1):
         stop.set()
 
 
-def _ingest_and_preprocess(frames_in, cfg: RegisterSeriesConfig, timings):
-    """Materialize the series and run function A chunk-by-chunk.
-
-    Accepts a full (N, H, W) array or an iterable of chunk arrays.  With a
-    stream, chunks are prefetched one ahead on a background thread, so each
-    is preprocessed while the next is still being acquired (the boundary
-    pair spanning two chunks is registered with the previous chunk's last
-    frame); the ``ingest`` timing then measures the residual stall, not the
-    full acquisition time.
-    """
-    reg_cfg = cfg.registration
-    pair_fn = jax.vmap(lambda r, t: register_pair(r, t, None, reg_cfg))
-
-    if isinstance(frames_in, (jax.Array, jnp.ndarray)) or hasattr(
-        frames_in, "shape"
-    ):
-        chunks: Iterable = [frames_in]
-    else:
-        chunks = _prefetched(frames_in)
-
-    frames_list: List[jax.Array] = []
-    defs: List[Deformation] = []
-    iters: List[Any] = []
-    prev_last: Optional[jax.Array] = None
-    t_ingest = 0.0
-    t_pre = 0.0
-    it = iter(chunks)
-    while True:
-        t0 = time.perf_counter()
-        chunk = next(it, None)
-        if chunk is not None:
-            chunk = jnp.asarray(chunk)
-            jax.block_until_ready(chunk)
-        t_ingest += time.perf_counter() - t0
-        if chunk is None:
-            break
-        if chunk.shape[0] == 0:
-            # A stream may emit empty chunks (e.g. a ragged tail); there is
-            # nothing to register and no last frame to carry forward.
-            continue
-        frames_list.append(chunk)
-        t0 = time.perf_counter()
-        refs = chunk[:-1] if prev_last is None else jnp.concatenate(
-            [prev_last[None], chunk[:-1]], axis=0
-        )
-        tmps = chunk if prev_last is not None else chunk[1:]
-        if refs.shape[0]:
-            res = pair_fn(refs, tmps)
-            jax.block_until_ready(res.deformation)
-            defs.append(res.deformation)
-            # Per-pair minimiser iteration counts: the operator-cost proxy
-            # that later seeds ahead-of-time segment sizing.
-            iters.append(jax.device_get(res.iterations))
-        prev_last = chunk[-1]
-        t_pre += time.perf_counter() - t0
-
-    frames = (
-        frames_list[0]
-        if len(frames_list) == 1
-        else jnp.concatenate(frames_list, axis=0)
-    )
-    n = frames.shape[0]
-    if n < 2:
-        raise ValueError(f"register_series needs >= 2 frames, got {n}")
-    pair_defs = jax.tree.map(lambda *ts: jnp.concatenate(ts, axis=0), *defs)
-    elems = [
-        RegElement(jax.tree.map(lambda t, i=i: t[i], pair_defs), i, i + 1)
-        for i in range(n - 1)
-    ]
-    timings["ingest"] = t_ingest
-    timings["preprocess"] = t_pre
-    pair_iters = (
-        [int(v) for arr in iters for v in arr] if iters else None
-    )
-    return frames, elems, t_pre / max(n - 1, 1), pair_iters
-
-
 def register_series(
     frames: Union[jax.Array, Iterable[jax.Array]],
     cfg: RegisterSeriesConfig = RegisterSeriesConfig(),
+    *,
+    pool=None,
 ) -> SeriesResult:
     """Register an image series: the paper's pipeline, engine-dispatched.
 
     ``frames``: (N, H, W) array or an iterable of chunk arrays (streaming
-    ingest).  Returns cumulative deformations phi_{0,i} aligning every frame
-    to frame 0, with per-stage timings and operator telemetry.
+    ingest, prefetched ``cfg.prefetch_depth`` chunks ahead).  ``pool``:
+    optional :class:`~repro.runtime.scheduler.WorkerPool` (the process-wide
+    shared pool by default).  Returns cumulative deformations phi_{0,i}
+    aligning every frame to frame 0, with per-stage timings and operator
+    telemetry.
     """
-    timings: Dict[str, float] = {}
-    frames_arr, elems, sec_per_pair, pair_iters = _ingest_and_preprocess(
-        frames, cfg, timings
-    )
-
-    registrar = SeriesRegistrar(
-        frames_arr, cfg.registration, refine=cfg.refine
-    )
-    backend_used = cfg.backend
-    t0 = time.perf_counter()
-    scan_stats = None
-    if not cfg.refine:
-        # Pure composition is exactly associative and cheap: batched
-        # deformation composition through the vectorized engine path.
-        batched = jax.tree.map(
-            lambda *ts: jnp.stack(ts, axis=0),
-            *[e.deformation for e in elems],
-        )
-        out_defs = engine_scan(
-            compose_batched,
-            batched,
-            backend=cfg.backend,
-            algorithm=cfg.algorithm,
-            workers=cfg.workers,
-        )
-        jax.block_until_ready(out_defs)
-        out = [
-            RegElement(jax.tree.map(lambda t, i=i: t[i], out_defs), 0, i + 1)
-            for i in range(len(elems))
-        ]
-        backend_used = cfg.backend or "vector"
-        op = RegistrationOperator(registrar, name=cfg.telemetry_name)
-    else:
-        op = RegistrationOperator(
-            registrar,
-            name=cfg.telemetry_name,
-            skip_tol=cfg.skip_tol,
-            fused=cfg.fused_ncc,
-        )
-        if op.op_cost_estimate is None and sec_per_pair > 0:
-            # Telemetry priming: function A's per-pair cost is the best
-            # prior for function B (same minimiser, same frames).
-            op.prime(sec_per_pair)
-        if pair_iters is not None and len(pair_iters) == len(elems):
-            # Per-pair iteration counts prime the *per-element* cost
-            # history, so the hierarchical backend can size segments to
-            # equal cost ahead of time (straggler pairs are already
-            # visible in function A's convergence behaviour).
-            op.prime_elements(pair_iters)
-        from repro.core.engine import dispatch as cost_dispatch
-
-        num_segments, num_threads = cfg.num_segments, cfg.num_threads
-        cross_steal = cfg.cross_steal
-        algorithm = cfg.algorithm
-        if backend_used is None:
-            d = cost_dispatch(
-                len(elems), domain="element",
-                op_cost=op.op_cost_estimate, workers=cfg.workers,
-                op_imbalance=op.op_imbalance_estimate,
-            )
-            # Execute exactly what the dispatcher decided (its circuit,
-            # segment and thread counts — unless the config pins them).
-            backend_used = d.backend
-            if algorithm is None:
-                algorithm = d.algorithm
-            if num_segments is None:
-                num_segments = d.num_segments
-            if num_threads is None:
-                num_threads = d.num_threads
-            if cross_steal is None:
-                cross_steal = d.cross_steal
-        out = engine_scan(
-            op,
-            list(elems),
-            backend=backend_used,
-            algorithm=algorithm,
-            num_segments=num_segments,
-            num_threads=num_threads,
-            stealing=cfg.stealing,
-            cross_steal=cross_steal,
-            workers=cfg.workers,
-        )
-        if backend_used == "hierarchical":
-            from repro.core.engine import hierarchical
-
-            scan_stats = hierarchical.last_stats
-    timings["scan"] = time.perf_counter() - t0
-
-    # Batched composition of the output: one (N, ...) Deformation pytree,
-    # identity at index 0 so deformations[i] aligns frames[i] -> frames[0].
-    t0 = time.perf_counter()
-    all_defs = [identity_deformation()] + [e.deformation for e in out]
-    deformations = jax.tree.map(
-        lambda *ts: jnp.stack([jnp.asarray(t) for t in ts], axis=0), *all_defs
-    )
-    jax.block_until_ready(deformations)
-    timings["compose"] = time.perf_counter() - t0
-
-    return SeriesResult(
-        deformations=deformations,
-        elements=out,
-        timings=timings,
-        backend=backend_used,
-        op_telemetry=op.telemetry.summary(),
-        scan_stats=scan_stats,
-    )
+    session = SeriesSession(cfg, pool=pool)
+    try:
+        if isinstance(frames, (jax.Array, jnp.ndarray)) or hasattr(
+            frames, "shape"
+        ):
+            session.feed(frames)
+        else:
+            for chunk in _prefetched(frames, depth=cfg.prefetch_depth):
+                session.feed(chunk)
+        return session.result()
+    finally:
+        session.close()

@@ -1,0 +1,674 @@
+"""Persistent registration runtime: series sessions over the shared pool.
+
+The paper's acquisition setting is *streaming* — 4,096 frames over ten
+seconds, series after series — yet ``register_series`` used to be a one-shot
+batch call that threw every piece of scan state away at return.  This module
+makes the runtime resident:
+
+    session = open_series(cfg)            # a tenant of the shared WorkerPool
+    session.feed(chunk)                   # ingest + function A + seeded scan
+    session.feed(chunk)                   #   ... as frames arrive
+    res = session.result()                # SeriesResult for everything so far
+    res2 = session.extend(late_frames)    # O(new) fold, no recompute
+    session.close()
+
+**Incremental scan.**  The scan operator is associative, so a session only
+has to retain the running cumulative element phi_{0,m} (plus per-chunk
+reduce summaries for recovery): a suffix of ``k`` new frames costs the
+``k`` function-A pair registrations plus a *seeded* engine scan of the
+``k`` new elements — O(new) operator applications and an O(log S)
+cross-segment phase, against the O(n + new) full recompute
+(``benchmarks/bench_serve.py`` gates the ratio).  ``extend`` after
+``result()`` is explicitly supported: a frame arriving late folds in
+without recomputing the series.
+
+**Multi-tenancy.**  All sessions execute on one injected
+:class:`~repro.runtime.scheduler.WorkerPool` (process-wide shared pool by
+default).  A session's scan runs inside ``pool.tenant()``: the dispatcher
+sees the pool's occupancy and tenant count, shrinks the per-series worker
+budget fairly, and shifts small series to the work-optimal sequential chain
+when the pool is saturated (``engine/cost.py:POOL_BUSY_OCCUPANCY``).
+
+**Telemetry isolation.**  Each session records into a *namespaced* channel
+(``get_telemetry(name, session=...)``): two concurrent series with
+same-named operators but different image sizes no longer share cost /
+imbalance EMAs (they used to poison each other's dispatch).  ``close()``
+releases the channel.
+
+**Frame residency.**  Function B only ever touches frame 0 (every refined
+pair is (0, k)), the boundary frame of the previous chunk, and the frames
+of the chunk being scanned — so after each feed the session evicts
+everything else (:class:`_FrameStore`).  A 4,096-frame session holds two
+frames, not four thousand.
+
+**Recovery.**  ``checkpoint()`` snapshots the scan state (cumulative
+deformations, boundary frames, per-pair cost history, telemetry prime)
+through :class:`~repro.checkpoint.checkpointer.Checkpointer`;
+``SeriesSession.restore`` rebuilds a mid-series session from the latest
+snapshot and continues feeding.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import threading
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.core.deformation import (
+    Deformation,
+    compose,
+    compose_batched,
+    identity_deformation,
+)
+from repro.core.engine import (
+    dispatch as cost_dispatch,
+    get_telemetry,
+    pool_aware_workers,
+    release_telemetry,
+    scan as engine_scan,
+)
+from repro.core.registration import (
+    RegElement,
+    RegistrationConfig,
+    RegistrationOperator,
+    SeriesRegistrar,
+    register_pair,
+)
+from repro.runtime.scheduler import get_default_pool
+
+
+@dataclasses.dataclass(frozen=True)
+class RegisterSeriesConfig:
+    """Knobs for :func:`repro.register_series` and :class:`SeriesSession`
+    (defaults follow the paper)."""
+
+    registration: RegistrationConfig = RegistrationConfig()
+    refine: bool = True                  # function B refinement (paper's B)
+    backend: Optional[str] = None        # None -> cost-model dispatch
+    algorithm: Optional[str] = None
+    num_segments: Optional[int] = None   # hierarchical: node-local segments
+    num_threads: Optional[int] = None    # threads (per segment, if hier)
+    stealing: bool = True
+    cross_steal: Optional[bool] = None   # inter-segment stealing; None ->
+                                         # dispatcher rule (telemetry imbalance)
+    workers: Optional[int] = None
+    skip_tol: Optional[float] = None     # fused guess check threshold
+    fused_ncc: Optional[bool] = None     # route checks through warp_ncc
+    telemetry_name: str = "registration_B"
+    prefetch_depth: int = 1              # streaming-ingest lookahead chunks
+
+    def __post_init__(self):
+        if self.prefetch_depth < 1:
+            raise ValueError(
+                f"prefetch_depth must be >= 1, got {self.prefetch_depth}"
+            )
+
+
+@dataclasses.dataclass
+class SeriesResult:
+    """Everything :func:`repro.register_series` / ``session.result()``
+    produce."""
+
+    deformations: Deformation            # batched phi_{0,i}, identity at i=0
+    elements: List[RegElement]           # scan output, N-1 entries
+    timings: Dict[str, float]            # per-stage seconds
+    backend: str                         # backend that executed the scan
+    op_telemetry: Dict[str, float]       # adapter cost statistics
+    scan_stats: Optional[Any] = None     # HierStats when hierarchical ran
+
+    @property
+    def n_frames(self) -> int:
+        return len(self.elements) + 1
+
+    def report(self) -> str:
+        lines = [
+            f"registered {self.n_frames} frames via backend={self.backend!r}"
+        ]
+        total = sum(self.timings.values())
+        for stage, secs in self.timings.items():
+            lines.append(f"  {stage:<12} {secs:8.3f}s")
+        lines.append(f"  {'total':<12} {total:8.3f}s")
+        tel = self.op_telemetry
+        if tel.get("calls"):
+            lines.append(
+                f"  operator: {tel['calls']:.0f} calls, "
+                f"mean {tel['mean_s'] * 1e3:.1f} ms, "
+                f"max {tel['max_s'] * 1e3:.1f} ms "
+                f"(imbalance {tel['imbalance']:.1f}x)"
+            )
+        if self.scan_stats is not None:
+            st = self.scan_stats
+            ph = st.phase_seconds
+            lines.append(
+                f"  hierarchical: {st.num_segments} segments x "
+                f"{st.threads_per_segment} threads; "
+                + ", ".join(f"{k}={v:.3f}s" for k, v in ph.items())
+            )
+            if getattr(st, "cross_steal", False):
+                per_seg = ",".join(str(k) for k in st.inter_segment_steals)
+                lines.append(
+                    "  cross-segment steals: "
+                    f"{st.total_inter_segment_steals()} "
+                    f"(per segment: {per_seg})"
+                    + ("; cost-history segment sizing"
+                       if st.rebalanced else "")
+                )
+        return "\n".join(lines)
+
+
+class _FrameStore:
+    """Frame access by *global* series index with O(1) residency.
+
+    Registrar-compatible (``shape`` + integer indexing), so function B can
+    keep addressing ``frames[a.i]`` / ``frames[b.k]`` by global index while
+    the session retains only the frames an incremental scan can touch:
+    frame 0 and the chunk boundary (everything else is evicted after its
+    chunk has been folded in).  Touching an evicted frame is a protocol
+    bug, not a recoverable condition — it raises with the index.
+    """
+
+    def __init__(self):
+        self._frames: Dict[int, jax.Array] = {}
+        self._n = 0
+        self._hw: tuple = ()
+
+    @property
+    def n(self) -> int:
+        return self._n
+
+    @property
+    def shape(self) -> tuple:
+        return (self._n,) + tuple(self._hw)
+
+    def __len__(self) -> int:
+        return self._n
+
+    def __getitem__(self, i) -> jax.Array:
+        try:
+            return self._frames[int(i)]
+        except KeyError:
+            raise IndexError(
+                f"frame {int(i)} was evicted from the session's frame "
+                f"window (resident: {sorted(self._frames)}); an incremental "
+                "scan should only touch frame 0, the chunk boundary and the "
+                "current chunk"
+            ) from None
+
+    def last(self) -> Optional[jax.Array]:
+        return self._frames.get(self._n - 1)
+
+    def append_chunk(self, chunk: jax.Array) -> None:
+        for i in range(chunk.shape[0]):
+            self._frames[self._n + i] = chunk[i]
+        self._n += int(chunk.shape[0])
+        self._hw = tuple(chunk.shape[1:])
+
+    def evict(self, keep) -> None:
+        keep = set(keep)
+        self._frames = {i: f for i, f in self._frames.items() if i in keep}
+
+    def restore(self, n: int, frames: Dict[int, jax.Array]) -> None:
+        self._n = n
+        self._frames = dict(frames)
+        if frames:
+            self._hw = tuple(next(iter(frames.values())).shape)
+
+
+@dataclasses.dataclass
+class _ChunkSummary:
+    """Retained per-feed reduce summary (recovery / introspection)."""
+
+    first_elem: int          # global index of the first element folded in
+    n_elems: int
+    seconds: float           # scan-stage wall time of this feed
+    ops: int                 # operator applications this feed recorded
+
+
+def _unflatten_keys(flat: Dict[str, Any]) -> Dict[str, Any]:
+    """Rebuild a nested dict from '/'-joined checkpoint leaf keys."""
+    out: Dict[str, Any] = {}
+    for key, value in flat.items():
+        node = out
+        parts = key.split("/")
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = value
+    return out
+
+
+_session_ids = itertools.count()
+
+
+class SeriesSession:
+    """One resident series: feed chunks, read results, extend, recover.
+
+    Sessions are *not* thread-safe for concurrent ``feed`` calls on the
+    same session (a series is one ordered stream); many sessions are safe
+    concurrently — that is the point of the shared pool.
+    """
+
+    def __init__(
+        self,
+        cfg: Optional[RegisterSeriesConfig] = None,
+        *,
+        pool=None,
+        session_id: Optional[str] = None,
+        checkpoint_dir: Optional[str] = None,
+    ):
+        self.cfg = cfg if cfg is not None else RegisterSeriesConfig()
+        self.id = session_id or f"series{next(_session_ids)}"
+        self.pool = pool if pool is not None else get_default_pool()
+        self.telemetry = get_telemetry(
+            self.cfg.telemetry_name, session=self.id
+        )
+        self._store = _FrameStore()
+        self._elements: List[RegElement] = []   # cumulative phi_{0,k}
+        self._pair_iters: List[int] = []        # function-A cost history
+        self._summaries: List[_ChunkSummary] = []
+        self._timings: Dict[str, float] = {
+            "ingest": 0.0, "preprocess": 0.0, "scan": 0.0, "compose": 0.0,
+        }
+        self._backend_used: Optional[str] = None
+        self._scan_stats = None
+        self._pre_seconds = 0.0
+        self._pre_pairs = 0
+        self._feed_lock = threading.Lock()
+        self._closed = False
+        self._ckpt = (
+            Checkpointer(checkpoint_dir, async_save=False)
+            if checkpoint_dir is not None else None
+        )
+
+    # ------------------------------------------------------------ queries
+
+    @property
+    def n_frames(self) -> int:
+        return self._store.n
+
+    @property
+    def n_elements(self) -> int:
+        return len(self._elements)
+
+    @property
+    def summaries(self) -> List[_ChunkSummary]:
+        return list(self._summaries)
+
+    def _check_open(self) -> None:
+        if self._closed:
+            raise RuntimeError(f"session {self.id!r} is closed")
+
+    # --------------------------------------------------------------- feed
+
+    def feed(self, chunk) -> "SeriesSession":
+        """Ingest one chunk of frames and fold it into the running scan.
+
+        Runs function A on the chunk's consecutive pairs (including the
+        pair spanning the previous chunk's boundary), then scans the new
+        elements *seeded* with the retained cumulative element — O(new)
+        operator applications however long the series already is.  Empty
+        chunks (ragged stream tails) are skipped.
+        """
+        self._check_open()
+        with self._feed_lock:
+            t0 = time.perf_counter()
+            chunk = jnp.asarray(chunk)
+            jax.block_until_ready(chunk)
+            self._timings["ingest"] += time.perf_counter() - t0
+            if chunk.shape[0] == 0:
+                return self
+            t0 = time.perf_counter()
+            prev_last = self._store.last()
+            refs = (
+                chunk[:-1] if prev_last is None
+                else jnp.concatenate([prev_last[None], chunk[:-1]], axis=0)
+            )
+            tmps = chunk if prev_last is not None else chunk[1:]
+            new_elems: List[RegElement] = []
+            if refs.shape[0]:
+                reg_cfg = self.cfg.registration
+                pair_fn = jax.vmap(
+                    lambda r, t: register_pair(r, t, None, reg_cfg)
+                )
+                res = pair_fn(refs, tmps)
+                jax.block_until_ready(res.deformation)
+                first = self._store.n - 1 if self._store.n else 0
+                new_elems = [
+                    RegElement(
+                        jax.tree.map(lambda a, i=i: a[i], res.deformation),
+                        first + i, first + i + 1,
+                    )
+                    for i in range(int(refs.shape[0]))
+                ]
+                self._pair_iters.extend(
+                    int(v) for v in jax.device_get(res.iterations)
+                )
+            self._store.append_chunk(chunk)
+            dt = time.perf_counter() - t0
+            self._timings["preprocess"] += dt
+            if new_elems:
+                self._pre_pairs += len(new_elems)
+                self._pre_seconds += dt
+                self._scan_suffix(new_elems)
+            # O(1) residency: only frame 0 and the boundary frame can be
+            # touched by future feeds.
+            self._store.evict({0, self._store.n - 1})
+        return self
+
+    def _scan_suffix(self, new_elems: List[RegElement]) -> None:
+        cfg = self.cfg
+        t0 = time.perf_counter()
+        seed = self._elements[-1] if self._elements else None
+        first_elem = len(self._elements)
+        ops_before = self.telemetry.calls
+        if not cfg.refine:
+            out = self._compose_suffix(new_elems, seed)
+            backend_used = cfg.backend or "vector"
+        else:
+            out, backend_used = self._refine_suffix(new_elems, seed)
+        self._backend_used = backend_used
+        self._elements.extend(out)
+        dt = time.perf_counter() - t0
+        self._timings["scan"] += dt
+        self._summaries.append(_ChunkSummary(
+            first_elem=first_elem,
+            n_elems=len(new_elems),
+            seconds=dt,
+            ops=self.telemetry.calls - ops_before,
+        ))
+
+    def _compose_suffix(self, new_elems, seed) -> List[RegElement]:
+        """refine=False: exactly-associative pure composition, vectorized —
+        one batched engine scan over the chunk, one broadcast seed fold."""
+        cfg = self.cfg
+        batched = jax.tree.map(
+            lambda *ts: jnp.stack(ts, axis=0),
+            *[e.deformation for e in new_elems],
+        )
+        scanned = engine_scan(
+            compose_batched,
+            batched,
+            backend=cfg.backend,
+            algorithm=cfg.algorithm,
+            workers=cfg.workers,
+        )
+        if seed is not None:
+            sd = seed.deformation
+            scanned = jax.vmap(lambda d: compose(sd, d))(scanned)
+        jax.block_until_ready(scanned)
+        base_k = len(self._elements) + 1
+        return [
+            RegElement(
+                jax.tree.map(lambda t, i=i: t[i], scanned), 0, base_k + i
+            )
+            for i in range(len(new_elems))
+        ]
+
+    def _refine_suffix(self, new_elems, seed):
+        """refine=True: function-B scan of the suffix, seeded with the
+        cumulative element, dispatched with pool awareness."""
+        cfg = self.cfg
+        registrar = SeriesRegistrar(self._store, cfg.registration, refine=True)
+        op = RegistrationOperator(
+            registrar,
+            name=cfg.telemetry_name,
+            telemetry=self.telemetry,
+            skip_tol=cfg.skip_tol,
+            fused=cfg.fused_ncc,
+        )
+        sec_per_pair = self._pre_seconds / max(self._pre_pairs, 1)
+        if op.op_cost_estimate is None and sec_per_pair > 0:
+            # Telemetry priming: function A's per-pair cost is the best
+            # prior for function B (same minimiser, same frames).
+            op.prime(sec_per_pair)
+        n_new = len(new_elems)
+        if n_new and len(self._pair_iters) >= n_new:
+            # The new pairs' function-A iteration counts seed per-element
+            # cost priors for this suffix's ahead-of-time segment sizing.
+            op.prime_elements(self._pair_iters[-n_new:])
+        backend_used = cfg.backend
+        algorithm = cfg.algorithm
+        num_segments, num_threads = cfg.num_segments, cfg.num_threads
+        cross_steal = cfg.cross_steal
+        with self.pool.tenant():
+            if backend_used is None:
+                d = cost_dispatch(
+                    n_new, domain="element",
+                    op_cost=op.op_cost_estimate,
+                    workers=pool_aware_workers(self.pool, cfg.workers),
+                    op_imbalance=op.op_imbalance_estimate,
+                    pool_occupancy=self.pool.occupancy(),
+                )
+                # Execute exactly what the dispatcher decided (its circuit,
+                # segment and thread counts — unless the config pins them).
+                backend_used = d.backend
+                if algorithm is None:
+                    algorithm = d.algorithm
+                if num_segments is None:
+                    num_segments = d.num_segments
+                if num_threads is None:
+                    num_threads = d.num_threads
+                if cross_steal is None:
+                    cross_steal = d.cross_steal
+            out = engine_scan(
+                op,
+                list(new_elems),
+                backend=backend_used,
+                algorithm=algorithm,
+                num_segments=num_segments,
+                num_threads=num_threads,
+                stealing=cfg.stealing,
+                cross_steal=cross_steal,
+                workers=cfg.workers,
+                seed=seed,
+                pool=self.pool,
+            )
+        if backend_used == "hierarchical":
+            from repro.core.engine import hierarchical
+
+            self._scan_stats = hierarchical.last_stats
+        return out, backend_used
+
+    # -------------------------------------------------------------- result
+
+    def result(self) -> SeriesResult:
+        """Assemble the :class:`SeriesResult` for everything fed so far.
+
+        Does *not* finalize the session: ``feed``/``extend`` keep working
+        afterwards (a frame arriving after completion folds in at O(new)).
+        """
+        self._check_open()
+        if not self._elements:
+            raise ValueError(
+                f"register_series needs >= 2 frames, got {self._store.n}"
+            )
+        t0 = time.perf_counter()
+        all_defs = [identity_deformation()] + [
+            e.deformation for e in self._elements
+        ]
+        deformations = jax.tree.map(
+            lambda *ts: jnp.stack([jnp.asarray(t) for t in ts], axis=0),
+            *all_defs,
+        )
+        jax.block_until_ready(deformations)
+        self._timings["compose"] += time.perf_counter() - t0
+        return SeriesResult(
+            deformations=deformations,
+            elements=list(self._elements),
+            timings=dict(self._timings),
+            backend=self._backend_used or "none",
+            op_telemetry=self.telemetry.summary(),
+            scan_stats=self._scan_stats,
+        )
+
+    def extend(self, new_frames) -> SeriesResult:
+        """Fold a suffix of frames in and return the updated result.
+
+        O(new) operator applications + an O(log S) cross-segment phase —
+        never a recompute of the existing prefix.  Valid before or after
+        ``result()``.
+        """
+        self.feed(new_frames)
+        return self.result()
+
+    # ------------------------------------------------------------ recovery
+
+    def checkpoint(self) -> int:
+        """Snapshot the scan state; returns the step (frames seen).
+
+        The snapshot holds the cumulative deformations, the two resident
+        boundary frames, the per-pair cost history and the telemetry
+        prime — everything ``restore`` needs to continue the series.
+        """
+        self._check_open()
+        if self._ckpt is None:
+            raise ValueError(
+                "session was opened without checkpoint_dir; pass one to "
+                "open_series(..., checkpoint_dir=...)"
+            )
+        if not self._elements:
+            raise ValueError("nothing to checkpoint: no elements scanned yet")
+        m = self._store.n
+        cum = jax.tree.map(
+            lambda *ts: jnp.stack([jnp.asarray(t) for t in ts], axis=0),
+            *[e.deformation for e in self._elements],
+        )
+        state = {
+            "cum": cum,
+            "frame0": self._store[0],
+            "last_frame": self._store[m - 1],
+            "pair_iters": jnp.asarray(self._pair_iters, jnp.int32),
+        }
+        meta = {
+            "session_id": self.id,
+            "n_frames": m,
+            "backend": self._backend_used,
+            "cfg": dataclasses.asdict(self.cfg),
+            "telemetry_name": self.cfg.telemetry_name,
+            "telemetry_ema_s": self.telemetry.summary()["ema_s"],
+            "timings": dict(self._timings),
+            "pre_seconds": self._pre_seconds,
+            "pre_pairs": self._pre_pairs,
+            "summaries": [dataclasses.asdict(s) for s in self._summaries],
+        }
+        self._ckpt.save(m, state, meta)
+        self._ckpt.wait()
+        return m
+
+    @classmethod
+    def restore(
+        cls,
+        checkpoint_dir: str,
+        cfg: Optional[RegisterSeriesConfig] = None,
+        *,
+        pool=None,
+        step: Optional[int] = None,
+    ) -> "SeriesSession":
+        """Rebuild a mid-series session from its latest (or given) snapshot.
+
+        The restored session resumes exactly where the snapshot left off:
+        retained cumulative elements, boundary frames, cost history and a
+        re-primed telemetry EMA (per-call imbalance statistics restart
+        from scratch, so cross-segment stealing re-enters its unobserved
+        insurance mode until new samples arrive).
+
+        ``cfg=None`` rebuilds the config the snapshot was taken under
+        (the default — the suffix continues under the same minimiser
+        settings as the prefix); an explicit ``cfg`` must agree on the
+        registration-affecting fields (``registration``/``refine``) or
+        restore refuses, since a mixed-settings series is silent data
+        corruption.
+        """
+        ckpt = Checkpointer(checkpoint_dir, async_save=False)
+        by_key, meta, _step = ckpt.restore_raw(step=step)
+        saved_cfg = meta.get("cfg")
+        if saved_cfg is not None:
+            stored = RegisterSeriesConfig(
+                registration=RegistrationConfig(**saved_cfg["registration"]),
+                **{k: v for k, v in saved_cfg.items() if k != "registration"},
+            )
+            if cfg is None:
+                cfg = stored
+            elif (cfg.registration, cfg.refine) != (
+                stored.registration, stored.refine,
+            ):
+                raise ValueError(
+                    "restore cfg disagrees with the snapshot's "
+                    "registration-affecting settings "
+                    f"(snapshot: registration={stored.registration}, "
+                    f"refine={stored.refine}); resume with cfg=None or "
+                    "matching settings"
+                )
+        self = cls(
+            cfg,
+            pool=pool,
+            session_id=meta["session_id"],
+            checkpoint_dir=checkpoint_dir,
+        )
+        m = int(meta["n_frames"])
+        # Rebuild the deformation pytree generically from the flattened
+        # checkpoint keys — the schema belongs to the Deformation type,
+        # not to this method (a variant with extra leaves must round-trip).
+        cum = _unflatten_keys({
+            k[len("cum/"):]: jnp.asarray(v)
+            for k, v in by_key.items() if k.startswith("cum/")
+        })
+        self._elements = [
+            RegElement(jax.tree.map(lambda t, i=i: t[i], cum), 0, i + 1)
+            for i in range(m - 1)
+        ]
+        self._store.restore(m, {
+            0: jnp.asarray(by_key["frame0"]),
+            m - 1: jnp.asarray(by_key["last_frame"]),
+        })
+        self._pair_iters = [int(v) for v in by_key["pair_iters"]]
+        self._backend_used = meta.get("backend")
+        self._timings.update(meta.get("timings", {}))
+        self._pre_seconds = float(meta.get("pre_seconds", 0.0))
+        self._pre_pairs = int(meta.get("pre_pairs", 0))
+        self._summaries = [
+            _ChunkSummary(**s) for s in meta.get("summaries", [])
+        ]
+        ema = meta.get("telemetry_ema_s") or 0.0
+        if ema > 0:
+            self.telemetry.record(float(ema))
+        return self
+
+    # ------------------------------------------------------------ lifetime
+
+    def close(self) -> None:
+        """Release the session's telemetry channel and frame window."""
+        if self._closed:
+            return
+        self._closed = True
+        release_telemetry(self.cfg.telemetry_name, session=self.id)
+        self._store = _FrameStore()
+
+    def __enter__(self) -> "SeriesSession":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def open_series(
+    cfg: Optional[RegisterSeriesConfig] = None,
+    *,
+    pool=None,
+    session_id: Optional[str] = None,
+    checkpoint_dir: Optional[str] = None,
+) -> SeriesSession:
+    """Open a resident series session on the shared runtime.
+
+    ``pool``: the :class:`~repro.runtime.scheduler.WorkerPool` to execute
+    on (process-wide shared pool by default).  ``checkpoint_dir`` enables
+    ``session.checkpoint()`` / :meth:`SeriesSession.restore`.
+    """
+    return SeriesSession(
+        cfg, pool=pool, session_id=session_id, checkpoint_dir=checkpoint_dir
+    )
