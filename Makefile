@@ -3,7 +3,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test test-fast test-slow lint bench bench-smoke bench-baseline ci quickstart
+.PHONY: test test-fast test-slow lint bench bench-smoke bench-kernels cache-smoke bench-baseline ci quickstart
 
 # Tier-1: the full suite, fail-fast, exactly as the roadmap runs it.
 test:
@@ -35,6 +35,17 @@ bench-smoke:
 	$(PY) benchmarks/compare_baseline.py BENCH_ci.json benchmarks/baselines/BENCH_ci.json
 	$(PY) benchmarks/compare_baseline.py BENCH_e2e_ci.json benchmarks/baselines/BENCH_e2e_ci.json
 	$(PY) benchmarks/compare_baseline.py BENCH_serve_ci.json benchmarks/baselines/BENCH_serve_ci.json
+	$(MAKE) bench-kernels cache-smoke
+
+# Device-resident hot path: decoupled-lookback kernel vs threaded
+# hierarchical + compile-cache warm/cold, gated against the baseline.
+bench-kernels:
+	$(PY) benchmarks/bench_scan_kernels.py --smoke --kernels --json BENCH_kernels_ci.json
+	$(PY) benchmarks/compare_baseline.py BENCH_kernels_ci.json benchmarks/baselines/BENCH_kernels_ci.json
+
+# Persistent-compile-cache effectiveness: a second series must warm-start.
+cache-smoke:
+	$(PY) benchmarks/cache_smoke.py
 
 # Refresh the committed bench baselines from this machine's smoke run.
 bench-baseline:

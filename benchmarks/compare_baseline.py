@@ -39,6 +39,15 @@ FLOORS = {
     # the committed baselines carry the real ratios.
     "pool_speedup": 1.2,
     "extend_speedup": 2.0,
+    # Device-resident hot path (bench_scan_kernels.py --kernels): the
+    # single-pass decoupled-lookback kernel >= 1.5x the threaded
+    # hierarchical backend on the cheap operator at n=4096, and a warm
+    # compile-cache start >= 2x faster to first results than a cold one.
+    # Committed baseline ratios are hand-clamped well below measured values
+    # (300x+ / 70x on the dev container) so RATIO_SLACK stays meaningful
+    # on slow shared runners; these floors are the true acceptance bars.
+    "device_speedup": 1.5,
+    "warm_speedup": 2.0,
 }
 RATIO_KEYS = ("speedup", "S'", "S_vs_static")
 

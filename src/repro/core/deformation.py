@@ -66,6 +66,12 @@ def compose_batched(a: Deformation, b: Deformation) -> Deformation:
     return {"angle": angle, "shift": shift}
 
 
+# Pure composition accepts operands stacked along a new leading axis — the
+# dispatcher may run element-domain phase 1 as one vmapped device launch
+# instead of WorkerPool threads (engine/cost.py: Dispatch.device_phase1).
+compose_batched.op_batchable = True
+
+
 def inverse(d: Deformation) -> Deformation:
     """phi^{-1}: R(-a)(x - c - G) + c."""
     ang = -d["angle"]

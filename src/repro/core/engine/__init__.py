@@ -49,6 +49,8 @@ from repro.runtime.scheduler import get_default_pool
 from .cost import (
     CHEAP_OP_COST,
     CROSS_STEAL_MIN_IMBALANCE,
+    DECOUPLED_MIN_N,
+    DEVICE_PHASE1_MIN_N,
     EXPENSIVE_OP_COST,
     POOL_BUSY_OCCUPANCY,
     Dispatch,
@@ -61,20 +63,24 @@ from .telemetry import (
     OpTelemetry,
     element_costs_from,
     get_telemetry,
+    op_batchable_from,
     op_cost_from,
     op_imbalance_from,
     release_telemetry,
 )
 
-# Registers the "pallas" and "hierarchical" backends on import.
+# Registers the "pallas", "hierarchical" and "decoupled" backends on import.
 from . import pallas_backend as _pallas_backend  # noqa: F401
 from . import hierarchical as _hierarchical  # noqa: F401
+from . import decoupled_backend as _decoupled_backend  # noqa: F401
 
 Op = Callable[[Any, Any], Any]
 
 __all__ = [
     "CHEAP_OP_COST",
     "CROSS_STEAL_MIN_IMBALANCE",
+    "DECOUPLED_MIN_N",
+    "DEVICE_PHASE1_MIN_N",
     "EXPENSIVE_OP_COST",
     "POOL_BUSY_OCCUPANCY",
     "pool_aware_workers",
@@ -98,10 +104,20 @@ __all__ = [
     "dtype_struct",
     "OpTelemetry",
     "get_telemetry",
+    "op_batchable_from",
     "op_cost_from",
     "op_imbalance_from",
     "element_costs_from",
 ]
+
+
+def _accel_available() -> bool:
+    """True when a real accelerator backs the default jax device — the
+    regime where the interpreted-on-CPU Pallas kernels become compiled
+    Mosaic kernels and the decoupled backend earns its keep."""
+    import jax
+
+    return jax.default_backend() in ("tpu", "gpu")
 
 
 def cache_stats():
@@ -159,6 +175,7 @@ def scan(
     use_pallas: Optional[bool] = None,
     workers: Optional[int] = None,
     seed: Any = None,
+    device_phase1: Optional[bool] = None,
     pool=None,
 ):
     """Inclusive prefix scan of ``xs`` with associative ``op``.
@@ -170,11 +187,18 @@ def scan(
     reach ``op``); positions before the first True element pass through
     unchanged.
 
-    ``seed`` (element domain): an element logically preceding ``xs[0]`` —
-    the scan returns the prefixes of ``[seed] + xs`` without the seed
-    itself.  This is the incremental-extension primitive: a series session
-    folds a new suffix in by seeding with the retained running total
-    (O(new) operator applications instead of recomputing the prefix).
+    ``seed``: an element logically preceding ``xs[0]`` — the scan returns
+    the prefixes of ``[seed] + xs`` without the seed itself.  This is the
+    incremental-extension primitive: a series session folds a new suffix
+    in by seeding with the retained running total (O(new) operator
+    applications instead of recomputing the prefix).  Supported by the
+    element-domain backends and, in both domains, by the single-pass
+    ``decoupled`` backend (the seed becomes tile 0's exclusive prefix).
+
+    ``device_phase1`` (element domain, hierarchical): run phase 1 as one
+    batched device launch instead of pool threads — requires an operator
+    that accepts stacked operands (``op_batchable``); the dispatcher turns
+    this on automatically for cheap batchable operators.
 
     ``pool`` (element domain): the :class:`~repro.runtime.scheduler`
     worker pool the threaded backends execute on (process-wide shared pool
@@ -194,9 +218,14 @@ def scan(
     :class:`ExecutionPlan`, cached across calls.
     """
     element_domain = isinstance(xs, list)
-    if seed is not None and (not element_domain or backend == "collective"):
+    if (
+        seed is not None
+        and backend != "decoupled"
+        and (not element_domain or backend == "collective")
+    ):
         raise NotImplementedError("seed= is supported in the element domain "
-                                  "only (worksteal/hierarchical/element)")
+                                  "(worksteal/hierarchical/element) and by "
+                                  "the decoupled backend")
     if element_domain and backend != "collective":
         if pool is None:
             pool = get_default_pool()
@@ -209,7 +238,8 @@ def scan(
                 strategy=strategy, axis_name=axis_name, axis_size=axis_size,
                 stealing=stealing, cross_steal=cross_steal,
                 element_costs=element_costs, interpret=interpret,
-                use_pallas=use_pallas, workers=workers, seed=seed, pool=pool,
+                use_pallas=use_pallas, workers=workers, seed=seed,
+                device_phase1=device_phase1, pool=pool,
             )
     return _scan_impl(
         op, xs, element_domain,
@@ -218,7 +248,8 @@ def scan(
         num_segments=num_segments, strategy=strategy, axis_name=axis_name,
         axis_size=axis_size, stealing=stealing, cross_steal=cross_steal,
         element_costs=element_costs, interpret=interpret,
-        use_pallas=use_pallas, workers=workers, seed=seed, pool=pool,
+        use_pallas=use_pallas, workers=workers, seed=seed,
+        device_phase1=device_phase1, pool=pool,
     )
 
 
@@ -255,6 +286,7 @@ def _scan_impl(
     use_pallas,
     workers,
     seed,
+    device_phase1,
     pool,
 ):
     # --- collective: SPMD over a mesh axis; xs is this device's element.
@@ -280,7 +312,10 @@ def _scan_impl(
     if n == 1:
         if element_domain and seed is not None:
             return [op(seed, xs[0])]
-        return list(xs) if element_domain else xs
+        if seed is None:
+            return list(xs) if element_domain else xs
+        # array-domain seeded scan (decoupled backend): the single element
+        # still has to fold the seed in — fall through to the backend.
 
     # --- dispatch
     if element_domain and workers is None:
@@ -302,12 +337,15 @@ def _scan_impl(
         d = dispatch(n, domain="element" if element_domain else "array",
                      op_cost=cost, workers=workers,
                      op_imbalance=op_imbalance_from(op),
-                     pool_occupancy=occupancy)
+                     pool_occupancy=occupancy,
+                     op_batchable=op_batchable_from(op),
+                     accel=_accel_available())
         backend = d.backend
         if where is not None and backend in ("blocked", "worksteal",
                                              "hierarchical"):
             # Decomposition backends cannot honor identity masks; fall back
             # to the flat plan executors, which resolve them at plan time.
+            # (The decoupled backend handles masks natively — flag lane.)
             backend = "element" if element_domain else "vector"
         algorithm = algorithm or d.algorithm
         num_blocks = num_blocks if num_blocks is not None else d.num_blocks
@@ -316,6 +354,8 @@ def _scan_impl(
                         else d.num_segments)
         cross_steal = cross_steal if cross_steal is not None else d.cross_steal
         strategy = strategy or d.strategy
+        if device_phase1 is None:
+            device_phase1 = d.device_phase1
     elif where is not None and (
         backend in ("blocked", "worksteal", "hierarchical")
         or (backend == "pallas" and num_blocks is not None and num_blocks > 1)
@@ -328,6 +368,12 @@ def _scan_impl(
     algorithm = algorithm or "ladner_fischer"
     strategy = strategy or "reduce_then_scan"
     fn = get_backend(backend)
+
+    # --- single-pass decoupled lookback: no plan, no global phase.
+    if backend == "decoupled":
+        ys, _ = fn(op, None, xs, num_blocks=num_blocks, seed=seed,
+                   where=where, interpret=interpret)
+        return ys
 
     # --- backends with their own decomposition (plan covers the small phase)
     if backend == "blocked":
@@ -368,7 +414,8 @@ def _scan_impl(
         ys, _ = fn(op, plan, xs, num_segments=s, num_threads=t,
                    stealing=stealing, cross_steal=cross_steal,
                    element_costs=element_costs, interpret=interpret,
-                   use_pallas=use_pallas, seed=seed, pool=pool)
+                   use_pallas=use_pallas, seed=seed,
+                   device_phase1=device_phase1, pool=pool)
         return ys
     if backend == "pallas" and num_blocks is not None and num_blocks > 1:
         # Tiles mode: the plan covers the global phase over tile totals.

@@ -70,6 +70,21 @@ POOL_BUSY_OCCUPANCY = 1.0
 # still wants parallel latency once the backlog drains.
 POOL_BUSY_MAX_N = 1024
 
+# Device-resident phase 1 (batched segment reduce): an operator that
+# advertises batchability (``op_batchable``) and costs less than the
+# expensive regime runs phase 1 as one vmapped device launch instead of a
+# WorkerPool thread army — per-task Python dispatch (~10-100 us) dwarfs
+# the operator itself there.  Below this N the stack/unstack overhead
+# around the launch eats the win.
+DEVICE_PHASE1_MIN_N = 64
+
+# Single-pass decoupled-lookback backend (array domain): worth its tile
+# protocol once the input is large enough to fill several tiles, on a real
+# accelerator (on CPU the interpreted kernel loses to plain XLA, so the
+# dispatcher only routes there when ``accel`` is set; explicit
+# ``backend="decoupled"`` always works).
+DECOUPLED_MIN_N = 256
+
 
 @dataclasses.dataclass(frozen=True)
 class Dispatch:
@@ -82,6 +97,7 @@ class Dispatch:
     num_segments: Optional[int] = None
     strategy: str = "reduce_then_scan"
     cross_steal: Optional[bool] = None
+    device_phase1: Optional[bool] = None   # batched vmap phase-1 reduce
     reason: str = ""
 
 
@@ -151,6 +167,8 @@ def dispatch(
     workers: Optional[int] = None,
     op_imbalance: Optional[float] = None,
     pool_occupancy: Optional[float] = None,
+    op_batchable: Optional[bool] = None,
+    accel: bool = False,
 ) -> Dispatch:
     """Pick backend + circuit + block size for one scan call.
 
@@ -167,6 +185,11 @@ def dispatch(
     instead of queueing parallel phases behind other tenants' tasks (the
     array-domain backends never touch the pool, so nothing shifts there —
     vector/blocked already are the non-queueing choice).
+    ``op_batchable``: the operator advertises a batched form (it accepts
+    stacked operands) — cheap/medium element-domain scans then run phase 1
+    as one device launch (``Dispatch.device_phase1``) instead of threads.
+    ``accel``: a real accelerator backs the default device; enables the
+    single-pass ``decoupled`` backend for cheap/medium array scans.
     """
     if n <= 1:
         return Dispatch("element" if domain == "element" else "vector",
@@ -175,6 +198,23 @@ def dispatch(
     cost = op_cost if op_cost is not None else 0.0
 
     if domain == "element":
+        if (
+            op_batchable
+            and op_cost is not None
+            and cost < EXPENSIVE_OP_COST
+            and n >= DEVICE_PHASE1_MIN_N
+        ):
+            # Batched phase 1: a cheap/medium operator that vectorizes
+            # runs its segment reduces as one vmapped device launch —
+            # per-task Python dispatch would dominate a thread army.
+            s = _largest_divisor_at_most(n, max(2 * w, 8))
+            return Dispatch(
+                "hierarchical", "ladner_fischer",
+                num_segments=s, num_threads=1,
+                strategy="reduce_then_scan", device_phase1=True,
+                reason=f"batchable cheap op ({cost:.2e}s) -> device-resident "
+                       "phase-1 reduce (vmap, no pool threads)",
+            )
         if (
             cost >= EXPENSIVE_OP_COST
             and pool_occupancy is not None
@@ -247,6 +287,18 @@ def dispatch(
                 reason=f"expensive op ({cost:.2e}s) -> work-optimal "
                        "reduce-then-scan",
             )
+    if accel and cost < EXPENSIVE_OP_COST and n >= DECOUPLED_MIN_N:
+        # Accelerator-backed cheap/medium scan: the single-pass decoupled
+        # lookback touches every element once and never leaves the device
+        # (no separate global phase).  CPU keeps the flat circuit — the
+        # interpreted kernel loses to plain XLA there.
+        return Dispatch(
+            "decoupled", "ladner_fischer",
+            num_blocks=None,  # kernel picks its tile count
+            strategy="single_pass",
+            reason=f"accelerator + cheap op, N={n} -> single-pass "
+                   "decoupled-lookback kernel",
+        )
     if n >= BLOCKED_MIN_N:
         blocks = _largest_divisor_at_most(n, max(2 * w, 8))
         if blocks > 1:

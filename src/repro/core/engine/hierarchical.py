@@ -59,6 +59,7 @@ class HierStats:
     cross_steal: bool = False                   # inter-segment stealing ran
     inter_segment_steals: List[int] = dataclasses.field(default_factory=list)
     rebalanced: bool = False                    # AOT cost-history segment sizing
+    device_phase1: bool = False                 # batched vmap reduce, no threads
 
     def imbalance(self) -> float:
         """Max relative busy-time imbalance across segments (paper Fig. 5b)."""
@@ -84,6 +85,81 @@ def segment_bounds(n: int, s: int) -> List[Tuple[int, int]]:
         out.append((lo, hi))
         lo = hi + 1
     return out
+
+
+# ---------------------------------------------------------------------------
+# element domain, device phase 1 — batched vmap reduce instead of threads
+# ---------------------------------------------------------------------------
+
+
+def _exec_hier_device(
+    op: Op,
+    xs: Sequence[Any],
+    stacked,
+    *,
+    num_segments: int,
+    seed: Any,
+    interpret: Optional[bool],
+    use_pallas: Optional[bool],
+) -> Tuple[list, Any]:
+    """Device-resident phase 1 for batchable operators.
+
+    The element list is stacked to the array domain, the whole two-level
+    reduce-then-scan runs as vectorized device launches
+    (:func:`_exec_hier_array`), an optional seed folds in with **one**
+    batched operator application, and the result is unstacked back to a
+    list.  No WorkerPool tasks: for a cheap batchable operator the
+    per-task Python dispatch is the phase-1 critical path, not the
+    operator.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from .cost import _largest_divisor_at_most
+
+    global last_stats
+    n = len(xs)
+    phase: Dict[str, float] = {}
+
+    t0 = time.perf_counter()
+    # Stacking happened in the caller (it doubles as the eligibility
+    # check); the array path needs S | N.
+    s = _largest_divisor_at_most(n, max(1, num_segments))
+    plan = get_plan("ladner_fischer", s) if s > 1 else None
+    phase["stack"] = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    ys_arr, _total = _exec_hier_array(
+        op, plan, stacked, num_segments=s, interpret=interpret,
+        use_pallas=use_pallas,
+    )
+    if seed is not None:
+        seed_b = jax.tree.map(
+            lambda sl, yl: jnp.broadcast_to(
+                jnp.asarray(sl)[None], yl.shape
+            ),
+            seed, ys_arr,
+        )
+        ys_arr = op(seed_b, ys_arr)
+    jax.block_until_ready(ys_arr)
+    phase["device"] = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    out = [jax.tree.map(lambda t, i=i: t[i], ys_arr) for i in range(n)]
+    total = jax.tree.map(lambda t: t[-1], ys_arr)
+    phase["unstack"] = time.perf_counter() - t0
+
+    last_stats = HierStats(
+        num_segments=s,
+        threads_per_segment=0,
+        segment_bounds=segment_bounds(n, s),
+        intervals=[],
+        steal_stats=[None] * s,
+        phase_seconds=phase,
+        total_ops=0,  # device-side applications are not individually timed
+        device_phase1=True,
+    )
+    return out, total
 
 
 # ---------------------------------------------------------------------------
@@ -394,6 +470,7 @@ def exec_hierarchical(
     element_costs: Optional[Sequence[float]] = None,
     interpret: Optional[bool] = None,
     use_pallas: Optional[bool] = None,
+    device_phase1: Optional[bool] = None,
     pool=None,
     **_,
 ) -> Tuple[Any, Any]:
@@ -405,11 +482,25 @@ def exec_hierarchical(
     boundary gaps; default on where feasible); ``element_costs`` is an
     optional per-element cost prior for ahead-of-time segment sizing
     (otherwise read from the operator's telemetry, if it has any).
-    ``pool`` is the scheduler segment reduces and interval applies run on
-    (element domain; the process-wide shared pool by default).
+    ``device_phase1`` runs element-domain phase 1 as one batched device
+    launch instead of pool threads (operators advertising ``op_batchable``;
+    falls back to threads when the elements don't stack).  ``pool`` is the
+    scheduler segment reduces and interval applies run on (element domain;
+    the process-wide shared pool by default).
     """
     s = num_segments if num_segments is not None else (plan.n if plan else 1)
     if isinstance(xs, list):
+        if device_phase1:
+            from .decoupled_backend import stack_elements
+
+            stacked = stack_elements(xs)
+            if stacked is not None:
+                return _exec_hier_device(
+                    op, xs, stacked,
+                    num_segments=s, seed=seed,
+                    interpret=interpret, use_pallas=use_pallas,
+                )
+            # Elements don't stack (opaque payloads): threads still work.
         return _exec_hier_element(
             op,
             plan,

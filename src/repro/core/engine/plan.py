@@ -293,7 +293,20 @@ def get_plan(
     # check (cheap tuple comparison) and lowered fresh, uncached.
     if plan is not None and plan.circuit == circuit:
         return plan
+    # LRU miss: a previous process may have lowered this schedule already —
+    # the persistent plan store (when configured via
+    # runtime.compile_cache.set_cache_dir) skips the symbolic trace.
+    from repro.runtime.compile_cache import get_plan_store
+
+    store = get_plan_store()
+    if plan is None and store is not None:
+        stored = store.load(key)
+        if stored is not None and stored.circuit == circuit:
+            plan_cache.put(key, stored)
+            return stored
     fresh = lower(circuit, mask=mask)
     if plan is None:
         plan_cache.put(key, fresh)
+        if store is not None:
+            store.store(key, fresh)
     return fresh

@@ -35,12 +35,25 @@ class OpTelemetry:
     max_time: float = 0.0
     min_time: float = float("inf")
     ema_time: Optional[float] = None
+    # Trace/JIT-compile time, kept strictly out of the per-call rate
+    # statistics: the first application after process start used to fold
+    # seconds of XLA compilation into the cost EMA, and the dispatcher
+    # then planned the whole first series around a 100x-inflated operator.
+    compile_calls: int = 0
+    compile_time: float = 0.0
 
     def __post_init__(self):
         self._lock = threading.Lock()
 
-    def record(self, seconds: float) -> None:
+    def record(self, seconds: float, *, compile: bool = False) -> None:
+        """Record one application.  ``compile=True`` marks a call whose
+        wall time is dominated by tracing/compilation — it is accumulated
+        separately and never touches the mean/max/EMA rate statistics."""
         with self._lock:
+            if compile:
+                self.compile_calls += 1
+                self.compile_time += seconds
+                return
             self.calls += 1
             self.total_time += seconds
             self.max_time = max(self.max_time, seconds)
@@ -70,6 +83,8 @@ class OpTelemetry:
             self.max_time = 0.0
             self.min_time = float("inf")
             self.ema_time = None
+            self.compile_calls = 0
+            self.compile_time = 0.0
 
     def summary(self) -> Dict[str, float]:
         return {
@@ -79,6 +94,8 @@ class OpTelemetry:
             "max_s": self.max_time if self.calls else 0.0,
             "ema_s": self.ema_time if self.ema_time is not None else 0.0,
             "imbalance": self.imbalance(),
+            "compile_calls": self.compile_calls,
+            "compile_s": self.compile_time,
         }
 
 
@@ -144,6 +161,24 @@ def op_imbalance_from(op) -> Optional[float]:
     if callable(est):
         est = est()
     return float(est) if est is not None else None
+
+
+def op_batchable_from(op) -> Optional[bool]:
+    """Does the operator advertise a batched form?
+
+    Adapters expose ``op_batchable`` (bool or zero-arg callable) when the
+    operator accepts operands stacked along a new leading axis — e.g. pure
+    deformation composition.  The dispatcher then runs element-domain
+    phase 1 as one vmapped device launch (``Dispatch.device_phase1``)
+    instead of WorkerPool threads.  None/absent means "unknown": never
+    assume batchability.
+    """
+    est = getattr(op, "op_batchable", None)
+    if est is None:
+        return None
+    if callable(est):
+        est = est()
+    return bool(est) if est is not None else None
 
 
 def element_costs_from(op, n: int) -> Optional[list]:

@@ -270,6 +270,23 @@ class RegistrationOperator:
     Thread-safe — the work-stealing executors apply it concurrently.
     """
 
+    # Process-wide record of which (frame shape, config, code path)
+    # signatures have already traced+compiled ``register_pair``.  The first
+    # application under a fresh signature is wall-clock dominated by XLA
+    # compilation; classifying it (``telemetry.record(..., compile=True)``)
+    # keeps seconds of one-off compile time out of the cost EMA the
+    # dispatcher plans the whole series around.  Class-level on purpose:
+    # the jit cache is process-wide, so a second operator instance over the
+    # same signature starts warm.
+    _warm_signatures: set = set()
+    _warm_lock = threading.Lock()
+
+    @classmethod
+    def _reset_compile_tracking(cls) -> None:
+        """Forget warm signatures (tests that clear jax caches)."""
+        with cls._warm_lock:
+            cls._warm_signatures.clear()
+
     def __init__(
         self,
         registrar: SeriesRegistrar,
@@ -375,6 +392,16 @@ class RegistrationOperator:
         import time
 
         t0 = time.perf_counter()
+        reg = self.registrar
+        sig = (
+            tuple(reg.frames.shape[1:]), reg.cfg, reg.refine,
+            self.skip_tol is not None, self.fused,
+        )
+        # Cold until the first call under this signature *completes*:
+        # concurrent calls that start while the compile is in flight all
+        # block on it and would otherwise poison the EMA with its wall time.
+        with RegistrationOperator._warm_lock:
+            cold = sig not in RegistrationOperator._warm_signatures
         # Attribute the cost to whichever operands ARE single scan
         # elements — left folds (stealing_reduce extending left) pass the
         # fresh element as ``a`` and the partial as ``b``, right folds the
@@ -385,7 +412,6 @@ class RegistrationOperator:
         # combines (pscan, phase 2) have no single element and are skipped.
         elem_idxs = [e.k - 1 for e in (a, b) if e.k - e.i == 1]
         try:
-            reg = self.registrar
             assert a.k == b.i, f"non-adjacent elements {a.i, a.k} . {b.i, b.k}"
             guess = compose(a.deformation, b.deformation)
             if not reg.refine:
@@ -404,8 +430,12 @@ class RegistrationOperator:
             return RegElement(res.deformation, a.i, b.k)
         finally:
             dt = time.perf_counter() - t0
-            self.telemetry.record(dt)
-            if elem_idxs:
+            self.telemetry.record(dt, compile=cold)
+            with RegistrationOperator._warm_lock:
+                RegistrationOperator._warm_signatures.add(sig)
+            # A compile-dominated sample is no basis for per-element cost
+            # ranking either — skip the observation, keep the prior.
+            if elem_idxs and not cold:
                 with self._count_lock:
                     for j in elem_idxs:
                         prev = self._elem_obs.get(j)

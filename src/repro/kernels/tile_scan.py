@@ -34,40 +34,13 @@ from typing import Any, Callable, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.experimental import pallas as pl
 
+# Shared with kernels/lookback_scan.py — the one-hot lowering and tile
+# padding helpers live in _tiling.py; re-exported here for compatibility.
+from ._tiling import build_round_matrices  # noqa: F401
+
 Op = Callable[[Any, Any], Any]
-
-
-def build_round_matrices(rnd, n: int):
-    """One-hot gather/scatter matrices + keep mask for one PlanRound.
-
-    Returns (ga, gb, sc, gm, sm, keep): combine gathers (m, n), combine
-    scatter (n, m), move gather (q, n), move scatter (n, q), keep (n, 1).
-    Combine/move groups are None when empty.
-    """
-    m = rnd.num_combines
-    q = rnd.num_moves
-    keep = np.ones((n, 1), dtype=np.float32)
-    ga = gb = sc = gm = sm = None
-    if m:
-        ga = np.zeros((m, n), dtype=np.float32)
-        gb = np.zeros((m, n), dtype=np.float32)
-        sc = np.zeros((n, m), dtype=np.float32)
-        for i, (a, b, out, _fan, _cs) in enumerate(rnd.combines):
-            ga[i, a] = 1.0
-            gb[i, b] = 1.0
-            sc[out, i] = 1.0
-            keep[out, 0] = 0.0
-    if q:
-        gm = np.zeros((q, n), dtype=np.float32)
-        sm = np.zeros((n, q), dtype=np.float32)
-        for i, (src, out, _fan) in enumerate(rnd.moves):
-            gm[i, src] = 1.0
-            sm[out, i] = 1.0
-            keep[out, 0] = 0.0
-    return ga, gb, sc, gm, sm, keep
 
 
 def _full_spec(*shape):

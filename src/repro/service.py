@@ -80,6 +80,7 @@ from repro.core.registration import (
     SeriesRegistrar,
     register_pair,
 )
+from repro.runtime.compile_cache import get_compile_cache, set_cache_dir
 from repro.runtime.scheduler import get_default_pool
 
 
@@ -121,6 +122,7 @@ class SeriesResult:
     backend: str                         # backend that executed the scan
     op_telemetry: Dict[str, float]       # adapter cost statistics
     scan_stats: Optional[Any] = None     # HierStats when hierarchical ran
+    compile_cache: Optional[Dict[str, float]] = None  # session hit/miss/secs
 
     @property
     def n_frames(self) -> int:
@@ -141,6 +143,13 @@ class SeriesResult:
                 f"mean {tel['mean_s'] * 1e3:.1f} ms, "
                 f"max {tel['max_s'] * 1e3:.1f} ms "
                 f"(imbalance {tel['imbalance']:.1f}x)"
+            )
+        cc = self.compile_cache
+        if cc is not None and (cc.get("hits") or cc.get("misses")):
+            lines.append(
+                f"  compile cache: {cc.get('hits', 0):.0f} hits, "
+                f"{cc.get('misses', 0):.0f} misses, "
+                f"{cc.get('compile_s', 0.0):.3f}s compiling"
             )
         if self.scan_stats is not None:
             st = self.scan_stats
@@ -260,9 +269,14 @@ class SeriesSession:
         pool=None,
         session_id: Optional[str] = None,
         checkpoint_dir: Optional[str] = None,
+        compile_cache_dir: Optional[str] = None,
     ):
         self.cfg = cfg if cfg is not None else RegisterSeriesConfig()
         self.id = session_id or f"series{next(_session_ids)}"
+        if compile_cache_dir is not None:
+            # Best-effort: enables jax's persistent XLA cache + the plan
+            # store; the in-process executable cache works regardless.
+            set_cache_dir(compile_cache_dir)
         self.pool = pool if pool is not None else get_default_pool()
         self.telemetry = get_telemetry(
             self.cfg.telemetry_name, session=self.id
@@ -273,6 +287,11 @@ class SeriesSession:
         self._summaries: List[_ChunkSummary] = []
         self._timings: Dict[str, float] = {
             "ingest": 0.0, "preprocess": 0.0, "scan": 0.0, "compose": 0.0,
+            "compile": 0.0,
+        }
+        # This session's view of the process-wide executable cache.
+        self._compile: Dict[str, float] = {
+            "hits": 0, "misses": 0, "compile_s": 0.0,
         }
         self._backend_used: Optional[str] = None
         self._scan_stats = None
@@ -330,10 +349,22 @@ class SeriesSession:
             )
             tmps = chunk if prev_last is not None else chunk[1:]
             new_elems: List[RegElement] = []
+            compile_before = self._compile["compile_s"]
             if refs.shape[0]:
                 reg_cfg = self.cfg.registration
-                pair_fn = jax.vmap(
-                    lambda r, t: register_pair(r, t, None, reg_cfg)
+                # AOT-compiled per (pair fn, batch, frame shape, dtype,
+                # config) signature: one compile per signature per process,
+                # shared across feeds and sessions.  The live module-level
+                # ``register_pair`` is part of the key so a swapped
+                # implementation never reuses a stale executable.
+                pair_fn = get_compile_cache().get_compiled(
+                    ("pair_vmap", register_pair, int(refs.shape[0]),
+                     tuple(refs.shape[1:]), str(refs.dtype), reg_cfg),
+                    lambda: jax.vmap(
+                        lambda r, t: register_pair(r, t, None, reg_cfg)
+                    ),
+                    lower_args=(refs, tmps),
+                    counters=self._compile,
                 )
                 res = pair_fn(refs, tmps)
                 jax.block_until_ready(res.deformation)
@@ -350,6 +381,13 @@ class SeriesSession:
                 )
             self._store.append_chunk(chunk)
             dt = time.perf_counter() - t0
+            # Compile seconds are accounted to their own stage: they used
+            # to inflate "preprocess" AND the telemetry prime derived from
+            # it (sec/pair), so the dispatcher planned the first suffix
+            # scan around a compile-dominated operator cost.
+            dt_compile = self._compile["compile_s"] - compile_before
+            dt -= dt_compile
+            self._timings["compile"] += dt_compile
             self._timings["preprocess"] += dt
             if new_elems:
                 self._pre_pairs += len(new_elems)
@@ -365,7 +403,9 @@ class SeriesSession:
         t0 = time.perf_counter()
         seed = self._elements[-1] if self._elements else None
         first_elem = len(self._elements)
-        ops_before = self.telemetry.calls
+        # Compile-classified applications still *happened* this feed — the
+        # summary counts work, the EMA alone excludes compile time.
+        ops_before = self.telemetry.calls + self.telemetry.compile_calls
         if not cfg.refine:
             out = self._compose_suffix(new_elems, seed)
             backend_used = cfg.backend or "vector"
@@ -379,7 +419,8 @@ class SeriesSession:
             first_elem=first_elem,
             n_elems=len(new_elems),
             seconds=dt,
-            ops=self.telemetry.calls - ops_before,
+            ops=self.telemetry.calls + self.telemetry.compile_calls
+                - ops_before,
         ))
 
     def _compose_suffix(self, new_elems, seed) -> List[RegElement]:
@@ -504,6 +545,7 @@ class SeriesSession:
             backend=self._backend_used or "none",
             op_telemetry=self.telemetry.summary(),
             scan_stats=self._scan_stats,
+            compile_cache=dict(self._compile),
         )
 
     def extend(self, new_frames) -> SeriesResult:
@@ -662,13 +704,18 @@ def open_series(
     pool=None,
     session_id: Optional[str] = None,
     checkpoint_dir: Optional[str] = None,
+    compile_cache_dir: Optional[str] = None,
 ) -> SeriesSession:
     """Open a resident series session on the shared runtime.
 
     ``pool``: the :class:`~repro.runtime.scheduler.WorkerPool` to execute
     on (process-wide shared pool by default).  ``checkpoint_dir`` enables
     ``session.checkpoint()`` / :meth:`SeriesSession.restore`.
+    ``compile_cache_dir`` points the persistent compilation cache (XLA
+    executables + lowered plans) at a directory so restarts warm-start
+    (:mod:`repro.runtime.compile_cache`).
     """
     return SeriesSession(
-        cfg, pool=pool, session_id=session_id, checkpoint_dir=checkpoint_dir
+        cfg, pool=pool, session_id=session_id, checkpoint_dir=checkpoint_dir,
+        compile_cache_dir=compile_cache_dir,
     )

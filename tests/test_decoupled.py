@@ -1,0 +1,319 @@
+"""Decoupled-lookback backend: oracle equivalence, mask/seed semantics,
+the published tile-status protocol, and the dispatcher rules that route to
+the device-resident paths.
+
+Bit-exactness strategy: integer-valued float32 inputs with ``+`` (or 0/1
+matrices with ``@``) make every association order produce the identical
+bits, so backends are compared with ``array_equal`` — no tolerance hides a
+reassociation bug.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                       # offline container
+    from _hypothesis_shim import given, settings, strategies as st
+
+from repro.core.deformation import compose, compose_batched
+from repro.core.engine import (
+    DECOUPLED_MIN_N,
+    DEVICE_PHASE1_MIN_N,
+    dispatch,
+    scan as engine_scan,
+)
+from repro.core.engine.decoupled_backend import stack_elements
+from repro.kernels.lookback_scan import (
+    FLAG_AGG,
+    FLAG_EMPTY,
+    FLAG_PREFIX,
+    LookbackProtocolError,
+    lookback_resolve,
+    lookback_scan,
+)
+
+add = lambda a, b: a + b
+
+
+def _int_rows(n, d=3, seed=0):
+    """Integer-valued float32 rows: exact under any summation order."""
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(-9, 10, (n, d)), jnp.float32)
+
+
+# ------------------------------------------------------- oracle equivalence
+
+
+@pytest.mark.parametrize("n", list(range(1, 18)) + [64, 1000])
+def test_matches_oracle_bit_exact(n):
+    x = _int_rows(n)
+    ref = jnp.cumsum(x, axis=0)
+    y = engine_scan(add, x, backend="decoupled")
+    assert y.dtype == x.dtype
+    assert jnp.array_equal(y, ref), n
+    seed = jnp.asarray([5.0, -3.0, 7.0], jnp.float32)
+    y2 = engine_scan(add, x, backend="decoupled", seed=seed)
+    assert jnp.array_equal(y2, ref + seed[None]), n
+
+
+def test_seeded_equals_prepended_unseeded():
+    x = _int_rows(40, seed=3)
+    seed = jnp.asarray([2.0, 4.0, -1.0], jnp.float32)
+    full = engine_scan(add, jnp.concatenate([seed[None], x]), backend="decoupled")
+    seeded = engine_scan(add, x, backend="decoupled", seed=seed)
+    assert jnp.array_equal(seeded, full[1:])
+
+
+def test_tile_count_sweep_is_invariant():
+    n = 96
+    x = _int_rows(n, seed=1)
+    ref = jnp.cumsum(x, axis=0)
+    for t in [1, 2, 3, 4, 6, 8, 12, 16, 96]:
+        y = engine_scan(add, x, backend="decoupled", num_blocks=t)
+        assert jnp.array_equal(y, ref), t
+    # Oversized tile counts clamp to n instead of erroring.
+    y = engine_scan(add, x, backend="decoupled", num_blocks=10 * n)
+    assert jnp.array_equal(y, ref)
+
+
+def test_under_jit():
+    x = _int_rows(100, seed=2)
+    f = jax.jit(lambda x: engine_scan(add, x, backend="decoupled"))
+    assert jnp.array_equal(f(x), jnp.cumsum(x, axis=0))
+
+
+def test_bfloat16_roundtrip():
+    x = jnp.asarray(_int_rows(64, seed=4), jnp.bfloat16)
+    y = engine_scan(add, x, backend="decoupled")
+    assert y.dtype == jnp.bfloat16
+    ref = jnp.cumsum(jnp.asarray(x, jnp.float32), axis=0)
+    np.testing.assert_allclose(
+        np.asarray(y, np.float32), np.asarray(ref), rtol=0.05, atol=1.0
+    )
+
+
+def test_noncommutative_matmul():
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.integers(0, 2, (33, 2, 2)), jnp.float32)
+    matop = lambda a, b: jnp.matmul(b, a)   # op(earlier, later)
+    y = engine_scan(matop, x, backend="decoupled", num_blocks=5)
+    acc, ref = x[0], [x[0]]
+    for i in range(1, 33):
+        acc = matop(acc, x[i])
+        ref.append(acc)
+    assert jnp.array_equal(y, jnp.stack(ref))
+
+
+def test_pytree_deformation_compose():
+    key = jax.random.PRNGKey(6)
+    n = 37
+    x = {
+        "angle": jax.random.normal(key, (n,)) * 0.05,
+        "shift": jax.random.normal(key, (n, 2)) * 2.0,
+    }
+    ref = engine_scan(compose_batched, x, backend="vector",
+                      algorithm="sequential")
+    y = engine_scan(compose_batched, x, backend="decoupled")
+    for k in ("angle", "shift"):
+        np.testing.assert_allclose(
+            np.asarray(y[k]), np.asarray(ref[k]), rtol=1e-5, atol=1e-6
+        )
+    # Seeded: decoupled is the one array-domain backend accepting a seed.
+    seed = {"angle": jnp.asarray(0.1), "shift": jnp.asarray([1.0, -2.0])}
+    ys = engine_scan(compose_batched, x, backend="decoupled", seed=seed)
+    want = jax.vmap(lambda d: compose(seed, d))(ref)
+    for k in ("angle", "shift"):
+        np.testing.assert_allclose(
+            np.asarray(ys[k]), np.asarray(want[k]), rtol=1e-5, atol=1e-6
+        )
+
+
+# ------------------------------------------------------------- where masks
+
+
+@pytest.mark.parametrize("maskgen", [
+    lambda n: [i % 3 != 1 for i in range(n)],     # interior holes
+    lambda n: [i >= 2 for i in range(n)],         # leading masked run
+    lambda n: [i == n // 2 for i in range(n)],    # single valid
+    lambda n: [True] * n,                         # all valid
+])
+def test_where_matches_plan_lowering(maskgen):
+    n = 13
+    x = _int_rows(n, d=2, seed=7)
+    mask = maskgen(n)
+    y = engine_scan(add, x, backend="decoupled", where=mask)
+    ref = engine_scan(add, x, backend="vector", where=mask)
+    assert jnp.array_equal(y, ref), mask
+
+
+def test_where_with_seed():
+    """Masked + seeded (only decoupled supports this combination in the
+    array domain): masked leading positions pass the seed through, valid
+    positions fold it in."""
+    n = 9
+    x = _int_rows(n, d=2, seed=8)
+    mask = [i not in (0, 1, 5) for i in range(n)]
+    seed = jnp.asarray([10.0, 20.0], jnp.float32)
+    y = engine_scan(add, x, backend="decoupled", where=mask, seed=seed)
+    acc = seed
+    for i in range(n):
+        if mask[i]:
+            acc = acc + x[i]
+        assert jnp.array_equal(y[i], acc), i
+
+
+def test_where_length_mismatch_raises():
+    with pytest.raises(ValueError, match="where mask length"):
+        engine_scan(add, _int_rows(8), backend="decoupled", where=[True] * 5)
+
+
+# --------------------------------------------------------- element domain
+
+
+def test_element_list_stacks_and_matches():
+    xs = [{"v": jnp.full((3,), float(i + 1))} for i in range(25)]
+    op = lambda a, b: {"v": a["v"] + b["v"]}
+    ys = engine_scan(op, xs, backend="decoupled")
+    assert isinstance(ys, list) and len(ys) == 25
+    acc = xs[0]
+    for i, y in enumerate(ys):
+        if i:
+            acc = op(acc, xs[i])
+        assert jnp.array_equal(y["v"], acc["v"]), i
+
+
+def test_unstackable_list_raises():
+    xs = [jnp.ones((2,)), jnp.ones((3,))]
+    assert stack_elements(xs) is None
+    with pytest.raises(ValueError, match="stackable"):
+        engine_scan(add, xs, backend="decoupled")
+
+
+# --------------------------------------------------------- dispatch rules
+
+
+def test_dispatch_decoupled_needs_accelerator():
+    n = max(4096, DECOUPLED_MIN_N)
+    d = dispatch(n, domain="array", op_cost=1e-5, accel=True)
+    assert d.backend == "decoupled"
+    # CPU CI: auto dispatch must be unchanged by this PR.
+    d = dispatch(n, domain="array", op_cost=1e-5, accel=False)
+    assert d.backend != "decoupled"
+    # Expensive ops and short scans stay off the single-pass kernel.
+    d = dispatch(n, domain="array", op_cost=1.0, accel=True)
+    assert d.backend != "decoupled"
+    d = dispatch(DECOUPLED_MIN_N - 1, domain="array", op_cost=1e-5, accel=True)
+    assert d.backend != "decoupled"
+
+
+def test_dispatch_device_phase1_needs_batchable():
+    n = max(256, DEVICE_PHASE1_MIN_N)
+    d = dispatch(n, domain="element", op_cost=1e-5, op_batchable=True)
+    assert d.backend == "hierarchical" and d.device_phase1
+    assert d.num_threads == 1
+    for kw in (
+        dict(op_cost=1e-5),                          # batchability unknown
+        dict(op_cost=1e-5, op_batchable=False),
+        dict(op_cost=1.0, op_batchable=True),        # expensive op
+        dict(op_batchable=True),                     # cost unknown
+    ):
+        d = dispatch(n, domain="element", **kw)
+        assert not d.device_phase1, kw
+
+
+def test_device_phase1_executes_on_device():
+    from repro.core.engine import hierarchical
+
+    op = lambda a, b: a + b
+    op.op_batchable = True
+    xs = [jnp.full((4,), float(i + 1)) for i in range(96)]
+    ys = engine_scan(op, xs, backend="hierarchical", device_phase1=True,
+                     num_segments=6)
+    st = hierarchical.last_stats
+    assert st.device_phase1 and st.threads_per_segment == 0
+    want = np.cumsum(np.arange(1.0, 97.0))
+    np.testing.assert_allclose(
+        np.asarray([y[0] for y in ys]), want, rtol=1e-6
+    )
+    ys = engine_scan(op, xs, backend="hierarchical", device_phase1=True,
+                     num_segments=6, seed=jnp.full((4,), 100.0))
+    np.testing.assert_allclose(
+        np.asarray([y[0] for y in ys]), want + 100.0, rtol=1e-6
+    )
+
+
+# ------------------------------------------- published protocol state
+
+
+def test_published_board_is_resolvable():
+    """After the kernel runs, every tile has published PREFIX and the board
+    is self-consistent: replaying the lookback walk from any tile yields
+    that tile's exclusive prefix."""
+    n, t = 60, 6
+    x = _int_rows(n, d=2, seed=9)
+    y, status, aggs, prefs = lookback_scan(add, x, t)
+    status = np.asarray(status)[:, 0]
+    assert (status == FLAG_PREFIX).all()
+    k = n // t
+    tile_aggs = np.asarray(x).reshape(t, k, 2).sum(axis=1)
+    np.testing.assert_array_equal(np.asarray(aggs), tile_aggs)
+    np.testing.assert_array_equal(
+        np.asarray(prefs), np.cumsum(tile_aggs, axis=0)
+    )
+    for i in range(1, t):
+        excl, steps = lookback_resolve(
+            add, i, status, np.asarray(aggs), np.asarray(prefs)
+        )
+        np.testing.assert_array_equal(excl, tile_aggs[:i].sum(axis=0))
+        assert steps == 1   # sequential grid: predecessor already PREFIX
+    np.testing.assert_array_equal(
+        np.asarray(y), np.cumsum(np.asarray(x), axis=0)
+    )
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    t=st.integers(min_value=2, max_value=24),
+    i=st.integers(min_value=1, max_value=23),
+    pattern=st.integers(min_value=0, max_value=2**23 - 1),
+)
+def test_lookback_resolve_adversarial_interleavings(t, i, pattern):
+    """Any interleaving of AGG/PREFIX publications that satisfies the
+    protocol invariant (tile 0 publishes PREFIX; every predecessor has
+    published *something*) resolves to the same exclusive prefix, stopping
+    at the nearest PREFIX."""
+    i = min(i, t - 1)
+    vals = [(j + 1) * 10 for j in range(t)]          # tile aggregates
+    prefs = list(np.cumsum(vals))
+    statuses = [FLAG_PREFIX] + [
+        FLAG_PREFIX if (pattern >> j) & 1 else FLAG_AGG
+        for j in range(1, t)
+    ]
+    excl, steps = lookback_resolve(
+        lambda a, b: a + b, i, statuses, vals, prefs
+    )
+    assert excl == prefs[i - 1]
+    nearest = next(
+        j for j in range(i - 1, -1, -1) if statuses[j] == FLAG_PREFIX
+    )
+    assert steps == i - nearest
+
+
+def test_lookback_resolve_rejects_protocol_violations():
+    vals = [10, 20, 30, 40]
+    prefs = [10, 30, 60, 100]
+    with pytest.raises(LookbackProtocolError, match="EMPTY"):
+        lookback_resolve(
+            add, 3, [FLAG_PREFIX, FLAG_EMPTY, FLAG_AGG], vals, prefs
+        )
+    with pytest.raises(LookbackProtocolError, match="past tile 0"):
+        lookback_resolve(
+            add, 3, [FLAG_AGG, FLAG_AGG, FLAG_AGG], vals, prefs
+        )
+    with pytest.raises(ValueError, match="no predecessors"):
+        lookback_resolve(add, 0, [FLAG_PREFIX], vals, prefs)

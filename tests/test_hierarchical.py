@@ -362,7 +362,9 @@ def test_register_series_smoke():
     ).max()
     assert err < 0.35, err
     assert res.scan_stats is not None
-    assert set(res.timings) == {"ingest", "preprocess", "scan", "compose"}
+    assert set(res.timings) == {
+        "ingest", "preprocess", "scan", "compose", "compile",
+    }
     assert res.op_telemetry["calls"] > 0
     assert "hierarchical" in res.report()
 

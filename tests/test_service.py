@@ -157,7 +157,9 @@ def test_refined_incremental_session_recovers_truth():
     ).max()
     assert err < 0.35, err
     assert res.op_telemetry["calls"] > 0
-    assert set(res.timings) == {"ingest", "preprocess", "scan", "compose"}
+    assert set(res.timings) == {
+        "ingest", "preprocess", "scan", "compose", "compile",
+    }
 
 
 def test_session_requires_two_frames_and_close_is_final():
