@@ -3,7 +3,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test test-fast test-slow lint bench bench-smoke bench-kernels cache-smoke bench-baseline ci quickstart
+.PHONY: test test-fast test-slow lint analyze analyze-fast bench bench-smoke bench-kernels cache-smoke bench-baseline ci quickstart
 
 # Tier-1: the full suite, fail-fast, exactly as the roadmap runs it.
 test:
@@ -22,6 +22,15 @@ test-slow:
 lint:
 	@if command -v ruff >/dev/null 2>&1; then ruff check .; \
 	else echo "ruff not installed; skipping lint (CI runs it)"; fi
+
+# Correctness tooling: static invariant lint over the hot paths + the
+# deterministic schedule-explorer suite (docs/ARCHITECTURE.md
+# "Correctness tooling").  `analyze-fast` is the sub-second smoke subset.
+analyze:
+	$(PY) -m repro.analysis
+
+analyze-fast:
+	$(PY) -m repro.analysis --fast
 
 bench:
 	$(PY) benchmarks/run.py
@@ -54,7 +63,7 @@ bench-baseline:
 	$(PY) benchmarks/bench_serve.py --smoke --json benchmarks/baselines/BENCH_serve_ci.json
 
 # Everything .github/workflows/ci.yml gates on, in one local target.
-ci: lint test-fast bench-smoke
+ci: lint analyze test-fast bench-smoke
 
 quickstart:
 	$(PY) examples/quickstart.py

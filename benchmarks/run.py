@@ -51,7 +51,7 @@ def main() -> None:
         t0 = time.time()
         try:
             rows = mod.run()
-        except Exception:
+        except Exception:  # noqa: BLE001 — isolate suite failures
             traceback.print_exc()
             failed.append(name)
             continue

@@ -1,0 +1,80 @@
+"""Sync-point labels + the runtime invariant gate (dependency-free).
+
+The concurrent protocols this repo hand-maintains — the shared-gap claim
+protocol (``core/work_stealing.py``), the WorkerPool task-group scheduler
+(``runtime/scheduler.py``) and the tile-status lookback board
+(``kernels/lookback_scan.py``) — mark their protocol-relevant steps with
+:func:`sync_point` labels.  The labels serve two purposes:
+
+* **model anchoring** — the deterministic schedule explorer
+  (``analysis/schedule.py``) permutes cooperative yields at *the same
+  labels*; ``tests/test_analysis.py`` asserts every label a model branches
+  on is actually hit by the real protocol, so the explored model and the
+  shipped code cannot silently drift apart;
+* **runtime invariant gating** — ``REPRO_CHECK_INVARIANTS=1`` turns on the
+  (otherwise zero-cost) invariant hooks the hot paths call after each
+  protocol round (:mod:`repro.analysis.invariants`).
+
+This module must stay import-cheap and free of any ``repro`` imports: the
+hot paths import it at module load, and ``sync_point`` sits inside claim
+loops — when checking is off it is one global-bool test.
+"""
+
+from __future__ import annotations
+
+import os
+import threading
+from collections import Counter
+from typing import Dict
+
+__all__ = [
+    "sync_point",
+    "invariants_enabled",
+    "set_checking",
+    "observed_labels",
+    "reset_observed",
+]
+
+_ENV_FLAG = "REPRO_CHECK_INVARIANTS"
+
+#: Process-wide gate.  Read once at import; flip at runtime via
+#: :func:`set_checking` (tests, debug sessions).
+_checking: bool = os.environ.get(_ENV_FLAG, "").strip() not in ("", "0", "false")
+
+_observed: Counter = Counter()
+_observed_lock = threading.Lock()
+
+
+def invariants_enabled() -> bool:
+    """True when runtime invariant checks (and label recording) are on."""
+    return _checking
+
+
+def set_checking(enabled: bool) -> None:
+    """Flip the runtime invariant gate (overrides the env var)."""
+    global _checking
+    _checking = bool(enabled)
+
+
+def sync_point(label: str) -> None:
+    """Mark one labeled protocol step.
+
+    A no-op (single global-bool test) unless checking is enabled, in which
+    case the label hit is counted so tests can assert the explorer's model
+    labels correspond to real execution points.
+    """
+    if not _checking:
+        return
+    with _observed_lock:
+        _observed[label] += 1
+
+
+def observed_labels() -> Dict[str, int]:
+    """Labels hit since the last reset (only populated while checking)."""
+    with _observed_lock:
+        return dict(_observed)
+
+
+def reset_observed() -> None:
+    with _observed_lock:
+        _observed.clear()

@@ -69,7 +69,11 @@ def compose_batched(a: Deformation, b: Deformation) -> Deformation:
 # Pure composition accepts operands stacked along a new leading axis — the
 # dispatcher may run element-domain phase 1 as one vmapped device launch
 # instead of WorkerPool threads (engine/cost.py: Dispatch.device_phase1).
+# Batchable ops form a monoid: the declared identity is what padding /
+# `where=` mask lifting folds in without changing any prefix (the
+# operator-contract lint pass OPC002 enforces the declaration).
 compose_batched.op_batchable = True
+compose_batched.op_identity = identity_deformation
 
 
 def inverse(d: Deformation) -> Deformation:

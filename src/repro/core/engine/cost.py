@@ -124,7 +124,7 @@ def measure_op_cost(op: Op, xs, *, reps: int = 3) -> float:
             import jax
 
             jax.block_until_ready(y)
-        except Exception:
+        except Exception:  # noqa: BLE001 — probe tolerates non-jax values
             pass
         times.append(time.perf_counter() - t0)
     times.sort()

@@ -46,6 +46,14 @@ import threading
 import time
 from typing import Any, Callable, List, Optional, Sequence, Tuple
 
+from repro.analysis.invariants import (
+    check_phase_order,
+    check_segment_intervals,
+    check_unique_claims,
+    claim_once,
+    record_events,
+)
+from repro.analysis.sync import invariants_enabled, sync_point
 from repro.runtime.scheduler import get_default_pool
 
 from .engine.backends import exec_element
@@ -245,6 +253,7 @@ def stealing_reduce(
     """
     n = len(items)
     t = num_threads
+    auto_starts = starts is None
     if starts is None:
         starts = _start_positions(n, t)
     elif len(starts) != t:
@@ -260,6 +269,11 @@ def stealing_reduce(
     stats = [ThreadStats(pl=s, pr=s) for s in starts]
     results: List[Any] = [None] * t
     t0 = clock()
+    # Debug claim ledger (REPRO_CHECK_INVARIANTS=1): every take recorded,
+    # double claims raise at record time, coverage checked after the join.
+    checking = invariants_enabled()
+    claims: dict = {}
+    claims_lock = threading.Lock() if checking else None
 
     def _outer_rate(side: int) -> float:
         fn = outer_rates[side]
@@ -275,8 +289,13 @@ def stealing_reduce(
         begin = clock()
         res = items[starts[tid]]
         st.busy_time += clock() - begin
+        sync_point("gap.seat")
+        if checking:
+            with claims_lock:
+                claim_once(claims, starts[tid], tid)
         spins = 0
         while True:
+            sync_point("gap.observe")
             ls = left.size() if left else 0
             rs = right.size() if right else 0
             if ls == 0 and rs == 0:
@@ -291,7 +310,11 @@ def stealing_reduce(
                 rate_r if right else 0.0,
                 ls, rs,
             )
+            sync_point("gap.take")
             idx = left.take_right() if d == "L" else right.take_left()
+            if idx is not None and checking:
+                with claims_lock:
+                    claim_once(claims, idx, tid)
             if idx is None:
                 # Lost the race for the gap's last element(s).  Yield, then
                 # back off (bounded) before re-observing both gap sizes —
@@ -332,6 +355,16 @@ def stealing_reduce(
     pool.run_tasks(
         [functools.partial(worker, i) for i in range(t)], label="steal_reduce"
     )
+    if checking:
+        # Terminal safety: per-thread intervals contiguous (no boundary
+        # element claimed twice or dropped); standalone reduces — no shared
+        # outer gaps moving the edges — additionally cover [0, n) exactly.
+        intervals = sorted((s.pl, s.pr) for s in stats)
+        if auto_starts and left_gap is None and right_gap is None:
+            check_segment_intervals(intervals, lo=0, hi=n - 1)
+            check_unique_claims(n, claims)
+        else:
+            check_segment_intervals(intervals)
     makespan = max(s.finish_time for s in stats)
     return results, StealStats(
         threads=stats,
@@ -421,13 +454,22 @@ def work_stealing_scan(
 
     if pool is None:
         pool = get_default_pool()
+    checking = invariants_enabled()
+    events: List[Tuple[str, int]] = []
+    events_lock = threading.Lock() if checking else None
     reduce_fn = stealing_reduce if stealing else static_reduce
+    sync_point("phase1.reduce")
     partials, stats = reduce_fn(op, items, num_threads, pool=pool)
+    if checking:
+        record_events(events, "p1_done", 0)
 
     # Phase 2: scan over partials with a precompiled circuit plan.
     if plan is None or plan.n != len(partials):
         plan = get_plan(algorithm, len(partials))
+    sync_point("phase2.scan")
     scanned, _ = exec_element(op, plan, partials)
+    if checking:
+        record_events(events, "p2_done", -1)
     stats.total_ops += plan.work()
 
     # Phase 3: seeded per-interval scans (parallel threads).
@@ -446,6 +488,10 @@ def work_stealing_scan(
             stats.total_ops += 1
 
     def apply_worker(tid: int) -> None:
+        sync_point("phase3.apply")
+        if checking:
+            with events_lock:
+                record_events(events, "p3_start", 0)
         lo, hi = bounds[tid]
         acc = seeds[tid]
         for j in range(lo, hi + 1):
@@ -456,6 +502,11 @@ def work_stealing_scan(
         [functools.partial(apply_worker, i) for i in range(len(bounds))],
         label="seeded_apply",
     )
+    if checking:
+        # Phase-3 applies must observe both completions: the event log is
+        # append-ordered, so any apply recorded before p1_done/p2_done
+        # trips the shared phase-order invariant.
+        check_phase_order(events)
     stats.total_ops += sum(
         (hi - lo + 1) - (1 if s is None else 0)
         for (lo, hi), s in zip(bounds, seeds)

@@ -17,6 +17,8 @@ from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.runtime.scheduler import DaemonHandle, spawn_daemon
+
 
 @dataclasses.dataclass
 class PipelineConfig:
@@ -43,7 +45,7 @@ class TokenPipeline:
         ]
         self._step = 0
         self._q: Optional[queue.Queue] = None
-        self._thread: Optional[threading.Thread] = None
+        self._producer: Optional[DaemonHandle] = None
         self._stop = threading.Event()
 
     # -- deterministic content ------------------------------------------
@@ -86,7 +88,15 @@ class TokenPipeline:
     def _fill(self):
         while not self._stop.is_set():
             item = (self._step_bg, self.batch_at(self._step_bg))
-            self._q.put(item)
+            # Bounded-wait put, re-checking the stop signal: an
+            # unconditional put on the full queue would park this daemon
+            # (and pin the pipeline) forever once the consumer stops.
+            while not self._stop.is_set():
+                try:
+                    self._q.put(item, timeout=0.05)
+                    break
+                except queue.Full:
+                    continue
             self._step_bg += 1
 
     def start(self, step: int = 0):
@@ -94,8 +104,10 @@ class TokenPipeline:
         self._step_bg = step
         self._q = queue.Queue(maxsize=self.cfg.prefetch)
         self._stop.clear()
-        self._thread = threading.Thread(target=self._fill, daemon=True)
-        self._thread.start()
+        # spawn_daemon (the scheduler's sanctioned service-thread spawn
+        # point) captures a producer crash into the handle; __next__ polls
+        # it instead of deadlocking on a queue no one will ever fill.
+        self._producer = spawn_daemon(self._fill, name="token-pipeline")
         return self
 
     def __next__(self) -> Dict[str, np.ndarray]:
@@ -103,7 +115,14 @@ class TokenPipeline:
             batch = self.batch_at(self._step)
             self._step += 1
             return batch
-        step, batch = self._q.get()
+        while True:
+            try:
+                step, batch = self._q.get(timeout=0.1)
+                break
+            except queue.Empty:
+                err = self._producer.error() if self._producer else None
+                if err is not None:
+                    raise RuntimeError("token pipeline producer failed") from err
         self._step = step + 1
         return batch
 

@@ -39,6 +39,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.analysis.invariants import check_board_published, check_lookback_step
+from repro.analysis.sync import invariants_enabled, sync_point
+
 Op = Callable[[jax.Array, jax.Array], jax.Array]
 
 #: Tile-status protocol flags (published in program order).
@@ -62,10 +65,17 @@ def lookback_resolve(op, i: int, statuses, aggs, prefs):
     """
     if i <= 0:
         raise ValueError("tile 0 has no predecessors to resolve against")
+    checking = invariants_enabled()
     acc = None
     steps = 0
     for j in range(i - 1, -1, -1):
         st = statuses[j]
+        if checking:
+            # Debug runs route every read through the shared invariant
+            # module (same checks the schedule explorer asserts) before
+            # the protocol error below.
+            sync_point("lookback.read")
+            check_lookback_step(i, j, int(st), stopped=(st == FLAG_PREFIX))
         if st == FLAG_EMPTY:
             raise LookbackProtocolError(
                 f"tile {i} read EMPTY status at predecessor {j}"
@@ -191,4 +201,9 @@ def lookback_scan(
         ),
         interpret=interpret,
     )(x3, seed_row)
+    if invariants_enabled():
+        # Terminal board state (debug runs only — forces a device sync):
+        # every tile must have published its inclusive PREFIX.
+        sync_point("lookback.publish_prefix")
+        check_board_published([int(s) for s in jax.device_get(status)[:, 0]])
     return y.reshape(n, d), status, aggs, prefs

@@ -405,7 +405,7 @@ def main():
                     results.append(
                         run_cell(arch, shape, multi_pod=mp, save=not args.no_save)
                     )
-                except Exception as e:  # a failed cell is a bug: report loudly
+                except Exception as e:  # noqa: BLE001 — a failed cell is a bug: report loudly
                     traceback.print_exc()
                     results.append({
                         "arch": arch, "shape": shape,

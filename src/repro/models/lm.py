@@ -50,7 +50,7 @@ def init_params(key, cfg: ArchConfig) -> Dict[str, Any]:
             continue
         bkeys = jax.random.split(jax.random.fold_in(keys[2], j), cfg.n_super)
         blocks[f"b{j}"] = jax.vmap(
-            lambda k: block_init(k, cfg, kind, cross=cross)
+            lambda k, kind=kind: block_init(k, cfg, kind, cross=cross)
         )(bkeys)
     params["blocks"] = blocks
     if "shared_attn" in cfg.block_pattern:

@@ -37,11 +37,12 @@ array: a single feed keeps the old batch behaviour exactly.
 
 from __future__ import annotations
 
-from typing import Iterable, List, Union
+from typing import Iterable, List, Optional, Union
 
 import jax
 import jax.numpy as jnp
 
+from repro.runtime.scheduler import spawn_daemon
 from repro.service import (  # noqa: F401 — canonical home; re-exported here
     RegisterSeriesConfig,
     SeriesResult,
@@ -87,11 +88,16 @@ def _prefetched(chunks: Iterable, depth: int = 1):
                 if not _put(c):
                     return  # consumer gone: drop the rest, exit cleanly
         except BaseException as e:  # noqa: BLE001 — re-raised in consumer
+            # Recorded before the ``end`` sentinel goes out (the finally
+            # below), so the consumer never sees ``end`` with an empty
+            # error list.
             err.append(e)
         finally:
             _put(end)
 
-    _threading.Thread(target=producer, daemon=True).start()
+    # Service-thread construction goes through the scheduler's sanctioned
+    # spawn point (lint THR001).
+    spawn_daemon(producer, name="repro-prefetch")
     try:
         while True:
             c = q.get()
@@ -106,7 +112,7 @@ def _prefetched(chunks: Iterable, depth: int = 1):
 
 def register_series(
     frames: Union[jax.Array, Iterable[jax.Array]],
-    cfg: RegisterSeriesConfig = RegisterSeriesConfig(),
+    cfg: Optional[RegisterSeriesConfig] = None,
     *,
     pool=None,
 ) -> SeriesResult:
@@ -119,6 +125,8 @@ def register_series(
     aligning every frame to frame 0, with per-stage timings and operator
     telemetry.
     """
+    if cfg is None:
+        cfg = RegisterSeriesConfig()
     session = SeriesSession(cfg, pool=pool)
     try:
         if isinstance(frames, (jax.Array, jnp.ndarray)) or hasattr(

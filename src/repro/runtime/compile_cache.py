@@ -216,8 +216,8 @@ def set_cache_dir(path: str) -> bool:
         ):
             try:
                 jax.config.update(flag, val)
-            except Exception:
+            except Exception:  # noqa: BLE001 — flag absent on old jax
                 pass
         return True
-    except Exception:
+    except Exception:  # noqa: BLE001 — persistent cache is best-effort
         return False

@@ -46,6 +46,9 @@ import os
 import threading
 from typing import Any, Callable, List, Optional, Sequence
 
+from repro.analysis.invariants import check_group_settled
+from repro.analysis.sync import invariants_enabled, sync_point
+
 
 class _TaskGroup:
     """One ``run_tasks`` batch: claim cursor, results, first error.
@@ -117,6 +120,7 @@ class WorkerPool:
         self._rr += 1
         idx = g.next
         g.next += 1
+        sync_point("pool.claim")
         return g, idx
 
     def _complete_locked(self, group: _TaskGroup, idx: int, result, err) -> None:
@@ -179,6 +183,7 @@ class WorkerPool:
                 if group.unclaimed() > 0:
                     idx = group.next
                     group.next += 1
+                    sync_point("pool.claim")
                     # Helper-claimed tasks are demand like any other:
                     # occupancy() must see them or a saturated pool of
                     # helping callers reads as idle.
@@ -195,6 +200,11 @@ class WorkerPool:
             with self._cond:
                 self._claimed -= 1
                 self._complete_locked(group, idx, result, err)
+        if invariants_enabled():
+            # The group a caller returns from must be fully settled: every
+            # task claimed exactly once and every claim completed.
+            with self._cond:
+                check_group_settled(len(fns), group.next, group.completed)
         if group.errors:
             raise group.errors[0]
         return group.results
@@ -323,6 +333,61 @@ class TransientPool:
 
     def shutdown(self) -> None:
         pass
+
+
+class DaemonHandle:
+    """Handle to a service thread spawned via :func:`spawn_daemon`.
+
+    The wrapped target's exception (if any) is captured into ``errors`` —
+    a daemon that dies silently strands its consumer on a queue forever,
+    so consumers poll :meth:`error` (or pass their own ``error_sink``)
+    instead of discovering the loss by deadlock.
+    """
+
+    __slots__ = ("thread", "errors")
+
+    def __init__(self, thread: threading.Thread, errors: List[BaseException]):
+        self.thread = thread
+        self.errors = errors
+
+    def error(self) -> Optional[BaseException]:
+        return self.errors[0] if self.errors else None
+
+    def alive(self) -> bool:
+        return self.thread.is_alive()
+
+    def join(self, timeout: Optional[float] = None) -> None:
+        self.thread.join(timeout)
+
+
+def spawn_daemon(
+    target: Callable[[], None],
+    *,
+    name: str = "repro-daemon",
+    error_sink: Optional[List[BaseException]] = None,
+) -> DaemonHandle:
+    """Spawn a long-lived daemon *service* thread (prefetch producers,
+    monitors) — the one sanctioned thread-construction point outside the
+    pool itself.
+
+    Hot-path compute must go through a :class:`WorkerPool` (the lint pass
+    THR001 enforces that); this helper exists for the streaming producers
+    whose lifetime is a generator's, not a task group's.  The target runs
+    wrapped so a crash is recorded in the returned handle (or the caller's
+    ``error_sink`` list) rather than vanishing with the thread.
+    """
+    errors: List[BaseException] = error_sink if error_sink is not None else []
+
+    def _run() -> None:
+        try:
+            target()
+        except BaseException as e:  # noqa: BLE001 — surfaced via the handle
+            errors.append(e)
+
+    t = threading.Thread(target=_run, daemon=True, name=name)
+    handle = DaemonHandle(t, errors)
+    t.start()
+    return handle
 
 
 def default_capacity() -> int:

@@ -18,7 +18,7 @@ import numpy as np
 from repro.core.work_stealing import rebalance_boundaries
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(frozen=True)
 class StragglerConfig:
     ema: float = 0.7
     trigger_imbalance: float = 0.15   # rebalance when (max-mean)/mean exceeds
@@ -28,8 +28,8 @@ class StragglerConfig:
 
 class StragglerMonitor:
     def __init__(self, num_hosts: int, global_batch: int,
-                 cfg: StragglerConfig = StragglerConfig()):
-        self.cfg = cfg
+                 cfg: Optional[StragglerConfig] = None):
+        self.cfg = cfg if cfg is not None else StragglerConfig()
         self.n = num_hosts
         self.batch = global_batch
         self.bounds: List[Tuple[int, int]] = [

@@ -1,0 +1,587 @@
+"""Correctness tooling (``repro.analysis``): static lint rules, the shared
+invariant module, and the deterministic schedule explorer — including the
+mutation-seeding proof that the explorer actually detects each class of
+protocol bug, and the anchoring tests that tie the explorer's sync-point
+labels to the real executors."""
+
+import numpy as np
+import pytest
+
+from repro.analysis import invariants as inv
+from repro.analysis.invariants import (
+    InvariantViolation,
+    check_board_published,
+    check_group_settled,
+    check_interval_partition,
+    check_lookback_step,
+    check_phase_order,
+    check_unique_claims,
+    claim_once,
+)
+from repro.analysis.lint import LintConfig, lint_source, load_config, run_lint
+from repro.analysis.schedule import (
+    SUITE_LABELS,
+    explore,
+    gap_model,
+    lookback_model,
+    phase_model,
+    standard_suite,
+    verify_simulator_twin,
+)
+from repro.analysis.sync import (
+    invariants_enabled,
+    observed_labels,
+    reset_observed,
+    set_checking,
+)
+
+
+def _rules(findings):
+    return [f.rule for f in findings]
+
+
+# ======================================================================
+# static lint: thread discipline
+# ======================================================================
+
+
+THREAD_SNIPPET = (
+    "import threading\n"
+    "def serve(fn):\n"
+    "    t = threading.Thread(target=fn)\n"
+    "    t.start()\n"
+)
+
+
+def test_thr001_raw_thread_in_hot_module():
+    assert _rules(lint_source(THREAD_SNIPPET, "pipeline.py")) == ["THR001"]
+
+
+def test_thr001_executor_construction_flagged():
+    src = (
+        "from concurrent.futures import ThreadPoolExecutor\n"
+        "ex = ThreadPoolExecutor(4)\n"
+    )
+    assert _rules(lint_source(src, "service.py")) == ["THR001"]
+
+
+def test_thr001_sanctioned_site_and_cold_modules_pass():
+    # The scheduler is the one allowed construction site...
+    assert lint_source(THREAD_SNIPPET, "runtime/scheduler.py") == []
+    # ...and modules off the hot-path list are out of scope.
+    assert lint_source(THREAD_SNIPPET, "viz/plots.py") == []
+
+
+def test_thr002_gap_mutation_outside_lock():
+    src = (
+        "from repro.core.work_stealing import _Gap\n"
+        "def bad(g):\n"
+        "    g.lo += 1\n"
+    )
+    assert _rules(lint_source(src, "whatever.py")) == ["THR002"]
+
+
+def test_thr002_mutation_under_lock_passes():
+    src = (
+        "from repro.core.work_stealing import _Gap\n"
+        "def good(g):\n"
+        "    with g.lock:\n"
+        "        g.lo += 1\n"
+    )
+    assert lint_source(src, "whatever.py") == []
+
+
+def test_thr002_inapplicable_without_gap_mention():
+    # `.lo` on unrelated objects in modules that never touch _Gap is fine.
+    src = "def f(obj):\n    obj.lo = 3\n"
+    assert lint_source(src, "whatever.py") == []
+
+
+def test_thr003_bare_except_flagged_everywhere():
+    src = "try:\n    f()\nexcept:\n    pass\n"
+    assert _rules(lint_source(src, "viz/plots.py")) == ["THR003"]
+
+
+def test_thr004_swallowed_blind_except_in_hot_module():
+    src = "def loop():\n    try:\n        f()\n    except Exception:\n        pass\n"
+    assert _rules(lint_source(src, "data/pipeline.py")) == ["THR004"]
+    # Recording the error is not swallowing.
+    src_ok = (
+        "def loop(errs):\n"
+        "    try:\n"
+        "        f()\n"
+        "    except Exception as e:\n"
+        "        errs.append(e)\n"
+    )
+    assert lint_source(src_ok, "data/pipeline.py") == []
+    # Cold modules are out of THR004 scope (ruff BLE001 covers them).
+    assert lint_source(src, "viz/plots.py") == []
+
+
+def test_allow_comment_suppresses_rule():
+    src = "try:\n    f()\nexcept:  # analysis: allow[THR003] probe\n    pass\n"
+    assert lint_source(src, "viz/plots.py") == []
+
+
+def test_syntax_error_reported_not_raised():
+    assert _rules(lint_source("def f(:\n", "x.py")) == ["AST000"]
+
+
+# ======================================================================
+# static lint: operator contract
+# ======================================================================
+
+
+def test_opc001_opc002_batchable_class_missing_parts():
+    src = "class Op:\n    op_batchable = True\n"
+    assert _rules(lint_source(src, "ops.py")) == ["OPC001", "OPC002"]
+
+
+def test_batchable_class_with_full_contract_passes():
+    src = (
+        "class Op:\n"
+        "    op_batchable = True\n"
+        "    def compose_batched(self, a, b):\n"
+        "        return a + b\n"
+        "    def op_identity(self):\n"
+        "        return 0\n"
+    )
+    assert lint_source(src, "ops.py") == []
+
+
+def test_opc002_function_attribute_form():
+    src = "def compose(a, b):\n    return a + b\ncompose.op_batchable = True\n"
+    assert _rules(lint_source(src, "ops.py")) == ["OPC002"]
+    src_ok = src + "compose.op_identity = make_identity\n"
+    assert lint_source(src_ok, "ops.py") == []
+
+
+def test_opc003_cost_estimate_with_required_args():
+    src = (
+        "class Op:\n"
+        "    def op_cost_estimate(self, items):\n"
+        "        return len(items)\n"
+    )
+    assert _rules(lint_source(src, "ops.py")) == ["OPC003"]
+    src_ok = "class Op:\n    def op_cost_estimate(self):\n        return 1.0\n"
+    assert lint_source(src_ok, "ops.py") == []
+
+
+def test_opc004_element_costs_arity():
+    src = (
+        "class Op:\n"
+        "    def element_cost_estimates(self):\n"
+        "        return []\n"
+    )
+    assert _rules(lint_source(src, "ops.py")) == ["OPC004"]
+    src_ok = (
+        "class Op:\n"
+        "    def element_cost_estimates(self, n):\n"
+        "        return [1.0] * n\n"
+    )
+    assert lint_source(src_ok, "ops.py") == []
+
+
+# ======================================================================
+# static lint: kernel purity
+# ======================================================================
+
+
+def _kernel(body_line):
+    return (
+        "import jax.experimental.pallas as pl\n"
+        "def k(x_ref, o_ref):\n"
+        f"    {body_line}\n"
+        "    o_ref[...] = x_ref[...]\n"
+        "def scan(x):\n"
+        "    return pl.pallas_call(k, out_shape=x)(x)\n"
+    )
+
+
+def test_krn001_impure_calls_in_kernel_body():
+    for line in ("print(x_ref)", "jax.debug.print('x')", "time.sleep(1)"):
+        findings = lint_source(_kernel(line), "kernels/foo.py")
+        assert _rules(findings) == ["KRN001"], line
+
+
+def test_krn002_global_in_kernel_body():
+    src = (
+        "import jax.experimental.pallas as pl\n"
+        "def k(x_ref, o_ref):\n"
+        "    global hits\n"
+        "    o_ref[...] = x_ref[...]\n"
+        "def scan(x):\n"
+        "    return pl.pallas_call(k, out_shape=x)(x)\n"
+    )
+    assert _rules(lint_source(src, "kernels/foo.py")) == ["KRN002"]
+
+
+def test_kernel_rules_scoped_to_kernel_paths():
+    # Same impure body outside kernels/ (and not forced into scope): clean.
+    assert lint_source(_kernel("print(x_ref)"), "viz/plots.py") == []
+    # Non-kernel helpers in a kernels/ module are also untouched.
+    src = "def host_helper():\n    print('fine')\n"
+    assert lint_source(src, "kernels/foo.py") == []
+
+
+# ======================================================================
+# lint driver: config + the clean-tree gate
+# ======================================================================
+
+
+def test_load_config_reads_pyproject():
+    cfg, repo = load_config()
+    assert cfg.root == "src/repro"
+    assert "core/work_stealing.py" in cfg.hot_path_modules
+    assert "runtime/scheduler.py" in cfg.thread_construction_allowed
+    assert isinstance(cfg, LintConfig)
+    import os
+
+    assert os.path.exists(os.path.join(repo, "pyproject.toml"))
+
+
+def test_tree_is_lint_clean():
+    """The acceptance gate: zero findings across the whole configured tree
+    (src/repro plus the operator-contract extra roots)."""
+    findings = run_lint()
+    assert findings == [], "\n".join(str(f) for f in findings)
+
+
+# ======================================================================
+# invariant checks (unit)
+# ======================================================================
+
+
+def test_flag_constants_pin_kernel_values():
+    from repro.kernels import lookback_scan as k
+
+    assert (inv.FLAG_EMPTY, inv.FLAG_AGG, inv.FLAG_PREFIX) == (
+        k.FLAG_EMPTY, k.FLAG_AGG, k.FLAG_PREFIX,
+    )
+
+
+def test_claims_invariants():
+    claims = {}
+    claim_once(claims, 0, "a")
+    claim_once(claims, 1, "b")
+    with pytest.raises(InvariantViolation, match="no-double-claim"):
+        claim_once(claims, 0, "b")
+    check_unique_claims(2, claims)
+    with pytest.raises(InvariantViolation, match="no-lost-element"):
+        check_unique_claims(3, claims)
+
+
+def test_interval_partition_invariants():
+    check_interval_partition(6, [(0, 2), (3, 3), (4, 5)])
+    with pytest.raises(InvariantViolation, match="interval-contiguity"):
+        check_interval_partition(6, [(0, 2), (4, 5)])
+    with pytest.raises(InvariantViolation, match="interval-cover-hi"):
+        check_interval_partition(6, [(0, 2), (3, 4)])
+    with pytest.raises(InvariantViolation, match="interval-nonempty"):
+        check_interval_partition(2, [(1, 0)])
+
+
+def test_group_settled_invariants():
+    check_group_settled(3, 3, 3)
+    with pytest.raises(InvariantViolation, match="group-claims"):
+        check_group_settled(3, 2, 3)
+    with pytest.raises(InvariantViolation, match="group-completion"):
+        check_group_settled(3, 3, 2)
+
+
+def test_lookback_step_invariants():
+    check_lookback_step(3, 2, inv.FLAG_AGG, stopped=False)
+    check_lookback_step(3, 1, inv.FLAG_PREFIX, stopped=True)
+    with pytest.raises(InvariantViolation, match="lookback-left-edge"):
+        check_lookback_step(3, -1, inv.FLAG_AGG, stopped=False)
+    with pytest.raises(InvariantViolation, match="lookback-no-empty-read"):
+        check_lookback_step(3, 2, inv.FLAG_EMPTY, stopped=False)
+    with pytest.raises(InvariantViolation, match="lookback-stop-at-prefix"):
+        check_lookback_step(3, 2, inv.FLAG_PREFIX, stopped=False)
+    with pytest.raises(InvariantViolation, match="board-terminal-prefix"):
+        check_board_published([inv.FLAG_PREFIX, inv.FLAG_AGG])
+
+
+def test_phase_order_invariants():
+    check_phase_order(
+        [("p1_done", 0), ("p1_done", 1), ("p2_done", -1),
+         ("p3_start", 0), ("p3_start", 1)]
+    )
+    with pytest.raises(InvariantViolation, match="phase3-after-phase1"):
+        check_phase_order([("p2_done", -1), ("p3_start", 0)])
+    with pytest.raises(InvariantViolation, match="phase3-after-phase2"):
+        check_phase_order([("p1_done", 0), ("p3_start", 0)])
+
+
+# ======================================================================
+# schedule explorer: clean protocols are verified exhaustively
+# ======================================================================
+
+
+def test_gap_protocol_clean_and_exhaustive():
+    res = explore(gap_model(5, 2, granularity="fine"))
+    assert res.ok and res.exhausted
+    assert res.schedules > 100  # a real interleaving space, not a single run
+    assert {"gap.seat", "gap.observe", "gap.take"} <= set(res.labels)
+
+
+def test_gap_protocol_cross_segment_seating_clean():
+    res = explore(
+        gap_model(8, 3, granularity="coarse", cross=(((0, 3), (4, 7)), (2, 1))),
+        max_schedules=150000,
+    )
+    assert res.ok and res.exhausted
+
+
+def test_phase_protocol_clean_and_exhaustive():
+    res = explore(phase_model(2))
+    assert res.ok and res.exhausted
+    assert {"phase1.reduce", "phase2.scan", "phase3.apply"} <= set(res.labels)
+
+
+def test_lookback_protocol_clean_and_exhaustive():
+    res = explore(lookback_model(3, granularity="fine"))
+    assert res.ok and res.exhausted
+    assert {"lookback.read", "lookback.publish_prefix"} <= set(res.labels)
+
+
+def test_explorer_reports_deadlock():
+    class DeadlockModel:
+        def __init__(self):
+            self.a_done = False
+            self.b_done = False
+
+        def tasks(self):
+            def ta():
+                yield ("wait", lambda: self.b_done)
+                self.a_done = True
+
+            def tb():
+                yield ("wait", lambda: self.a_done)
+                self.b_done = True
+
+            return [("a", ta()), ("b", tb())]
+
+        def finalize(self):
+            pass
+
+    res = explore(DeadlockModel)
+    assert not res.ok
+    assert res.deadlocks > 0
+    assert any(v.invariant == "deadlock" for v in res.violations)
+
+
+def test_fast_suite_is_clean_and_covers_model_labels():
+    entries = standard_suite(fast=True)
+    assert entries, "fast suite must not be empty"
+    seen = set()
+    for name, res in entries:
+        assert res.ok, f"{name}: {res.violations[:3]}"
+        if "sample" not in name:
+            assert res.exhausted, f"{name} did not exhaust its space"
+        seen |= set(res.labels)
+    assert set(SUITE_LABELS) <= seen
+
+
+def test_simulator_twin_sweep_clean():
+    assert verify_simulator_twin() == []
+
+
+# ======================================================================
+# schedule explorer: seeded protocol bugs must be detected
+# ======================================================================
+
+_SEEDED_BUGS = [
+    # (bug name, model factory, schedule budget)
+    ("drop_claim_cas",
+     gap_model(5, 2, granularity="fine", bugs=frozenset({"drop_claim_cas"})),
+     2000),
+    ("early_phase3",
+     phase_model(2, frozenset({"early_phase3"})),
+     2000),
+    ("unordered_publish",
+     lookback_model(3, granularity="fine", bugs=frozenset({"unordered_publish"})),
+     2000),
+    ("ignore_prefix_stop",
+     lookback_model(3, granularity="fine", bugs=frozenset({"ignore_prefix_stop"})),
+     2000),
+]
+
+
+@pytest.mark.parametrize(
+    "name,factory,budget", _SEEDED_BUGS, ids=[b[0] for b in _SEEDED_BUGS]
+)
+def test_explorer_detects_seeded_bug(name, factory, budget):
+    """Mutation seeding: re-introducing each known protocol race must be
+    caught within a bounded schedule budget — otherwise the explorer is
+    security theater."""
+    res = explore(factory, max_schedules=budget, stop_on_violation=True)
+    assert res.violations, f"seeded bug {name!r} survived {res.schedules} schedules"
+    assert res.schedules <= budget
+
+
+def test_seeded_cas_bug_reports_double_claim():
+    res = explore(
+        gap_model(5, 2, granularity="fine", bugs=frozenset({"drop_claim_cas"})),
+        max_schedules=2000,
+    )
+    assert any(
+        v.invariant in ("no-double-claim", "fold-order", "interval-contiguity")
+        for v in res.violations
+    )
+
+
+# ======================================================================
+# anchoring: the real executors hit the model's sync points
+# ======================================================================
+
+
+@pytest.fixture
+def checking():
+    set_checking(True)
+    reset_observed()
+    yield
+    set_checking(False)
+    reset_observed()
+
+
+def test_sync_gate_defaults_off():
+    assert not invariants_enabled()
+
+
+def test_real_executors_hit_all_suite_labels(checking):
+    """Every label the explorer's models branch on is hit by the shipped
+    executors under REPRO_CHECK_INVARIANTS — so the verified model and the
+    real protocol cannot silently drift apart."""
+    import jax.numpy as jnp
+
+    from repro.core.work_stealing import stealing_reduce, work_stealing_scan
+    from repro.kernels.lookback_scan import lookback_resolve, lookback_scan
+
+    op = lambda a, b: a + b
+    xs = list(range(24))
+    partials, _ = stealing_reduce(op, xs, 3)
+    assert sum(partials) == sum(xs)
+
+    ys, _ = work_stealing_scan(op, xs, 3)
+    assert ys[-1] == sum(xs)
+
+    x = jnp.asarray(np.arange(32.0, dtype=np.float32).reshape(16, 2))
+    y, status, aggs, prefs = lookback_scan(jnp.add, x, 4)
+    np.testing.assert_allclose(
+        np.asarray(y), np.cumsum(np.asarray(x), axis=0), rtol=1e-6
+    )
+    # Replay the lookback walk over the published board (the host twin of
+    # the kernel's read loop — the instrumented `lookback.read` path).
+    excl, _ = lookback_resolve(
+        np.add, 3, [int(s) for s in np.asarray(status)[:, 0]],
+        list(np.asarray(aggs)), list(np.asarray(prefs)),
+    )
+    np.testing.assert_allclose(excl, np.asarray(x)[:12].sum(axis=0))
+
+    observed = set(observed_labels())
+    missing = set(SUITE_LABELS) - observed
+    assert not missing, f"real executors never hit: {sorted(missing)}"
+    # And the pool's claim path is instrumented too.
+    assert "pool.claim" in observed
+
+
+def test_runtime_invariants_pass_on_real_reduce(checking):
+    """stealing_reduce's debug bookkeeping (unique claims + interval
+    partition) holds on a real concurrent run."""
+    from repro.core.work_stealing import stealing_reduce
+
+    op = lambda a, b: a + b
+    for _ in range(5):
+        partials, stats = stealing_reduce(op, list(range(40)), 4)
+        assert sum(partials) == sum(range(40))
+
+
+def test_lookback_resolve_checks_protocol_when_enabled(checking):
+    from repro.kernels.lookback_scan import lookback_resolve
+
+    op = lambda a, b: a + b
+    statuses = [inv.FLAG_PREFIX, inv.FLAG_AGG, inv.FLAG_AGG]
+    aggs = [1, 2, 3]
+    prefs = [1, None, None]
+    excl, steps = lookback_resolve(op, 2, statuses, aggs, prefs)
+    assert excl == 3 and steps == 2
+    assert observed_labels().get("lookback.read", 0) >= 2
+
+
+# ======================================================================
+# satellite regressions: sanctioned daemons + crash propagation
+# ======================================================================
+
+
+def test_spawn_daemon_captures_crash():
+    from repro.runtime.scheduler import spawn_daemon
+
+    def boom():
+        raise ValueError("daemon died")
+
+    h = spawn_daemon(boom, name="test-daemon")
+    h.join(timeout=2.0)
+    assert not h.alive()
+    assert isinstance(h.error(), ValueError)
+
+
+def test_token_pipeline_producer_crash_raises_not_deadlocks():
+    """Regression: a crashing producer used to leave the consumer blocked
+    forever on an empty queue; now the error surfaces on the next batch."""
+    from repro.data.pipeline import PipelineConfig, TokenPipeline
+
+    pipe = TokenPipeline(PipelineConfig(vocab_size=97, global_batch=4, seq_len=8))
+
+    def explode(step):
+        raise ValueError("producer exploded")
+
+    pipe.batch_at = explode
+    pipe.start()
+    try:
+        with pytest.raises(RuntimeError, match="producer failed"):
+            next(pipe)
+    finally:
+        pipe.stop()
+
+
+def test_token_pipeline_still_streams():
+    from repro.data.pipeline import PipelineConfig, TokenPipeline
+
+    pipe = TokenPipeline(
+        PipelineConfig(vocab_size=97, global_batch=4, seq_len=8)
+    ).start()
+    try:
+        b0 = next(pipe)
+        b1 = next(pipe)
+        assert b0["tokens"].shape == (4, 8)
+        assert not np.array_equal(b0["tokens"], b1["tokens"])
+    finally:
+        pipe.stop()
+
+
+def test_prefetch_forwards_producer_error():
+    from repro.pipeline import _prefetched
+
+    def gen():
+        yield 1
+        raise ValueError("stream died")
+
+    it = _prefetched(gen(), depth=2)
+    assert next(it) == 1
+    with pytest.raises(ValueError, match="stream died"):
+        for _ in it:
+            pass
+
+
+# ======================================================================
+# CLI
+# ======================================================================
+
+
+def test_cli_lint_clean(capsys):
+    from repro.analysis.__main__ import main
+
+    assert main(["lint"]) == 0
+    out = capsys.readouterr().out
+    assert "lint: 0 finding(s)" in out

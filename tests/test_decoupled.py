@@ -231,6 +231,7 @@ def test_device_phase1_executes_on_device():
 
     op = lambda a, b: a + b
     op.op_batchable = True
+    op.op_identity = lambda: jnp.zeros((4,))  # monoid contract (lint OPC002)
     xs = [jnp.full((4,), float(i + 1)) for i in range(96)]
     ys = engine_scan(op, xs, backend="hierarchical", device_phase1=True,
                      num_segments=6)

@@ -67,8 +67,8 @@ def test_compose_batched_matches_compose():
          "shift": jax.random.normal(key, (5, 2)) - 0.2}
     batched = compose_batched(a, b)
     for i in range(5):
-        single = compose(jax.tree.map(lambda t: t[i], a),
-                         jax.tree.map(lambda t: t[i], b))
+        single = compose(jax.tree.map(lambda t, i=i: t[i], a),
+                         jax.tree.map(lambda t, i=i: t[i], b))
         np.testing.assert_allclose(batched["angle"][i], single["angle"], rtol=1e-5)
         np.testing.assert_allclose(batched["shift"][i], single["shift"], rtol=1e-4,
                                    atol=1e-6)

@@ -1,7 +1,6 @@
 """WorkerPool runtime: task semantics, fairness, nesting, occupancy — and
 the zero-``threading.Thread`` invariant on the work-stealing hot paths."""
 
-import inspect
 import threading
 import time
 
@@ -215,21 +214,14 @@ def test_shutdown_rejects_new_work():
 
 
 def test_work_stealing_hot_paths_spawn_no_threads():
-    """PR acceptance: no ``threading.Thread(`` construction inside the
-    stealing/static reduce or the full scan — execution is routed through
-    the injected WorkerPool."""
-    from repro.core import work_stealing
-    from repro.core.engine import hierarchical
+    """Acceptance gate: the thread-discipline lint pass (THR001 — no raw
+    thread construction anywhere in the hot-path modules, promoted from
+    this test's old ``inspect.getsource`` grep) reports zero findings on
+    the tree, so the check and its enforcement cannot drift apart."""
+    from repro.analysis.lint import run_lint
 
-    for fn in (
-        work_stealing.stealing_reduce,
-        work_stealing.static_reduce,
-        work_stealing.work_stealing_scan,
-        hierarchical._exec_hier_element,
-    ):
-        src = inspect.getsource(fn)
-        assert "threading.Thread(" not in src, fn.__name__
-        assert "ThreadPoolExecutor" not in src, fn.__name__
+    findings = [f for f in run_lint() if f.rule == "THR001"]
+    assert findings == [], "\n".join(str(f) for f in findings)
 
 
 def test_stealing_reduce_runs_on_injected_pool():

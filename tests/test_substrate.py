@@ -135,7 +135,7 @@ def test_checkpoint_roundtrip_and_keep(tmp_path):
     ck = Checkpointer(str(tmp_path), keep=2, async_save=False)
     tree = {"a": jnp.arange(6.0).reshape(2, 3), "b": {"c": jnp.ones((4,))}}
     for step in [10, 20, 30]:
-        ck.save(step, jax.tree.map(lambda t: t + step, tree), {"note": step})
+        ck.save(step, jax.tree.map(lambda t, s=step: t + s, tree), {"note": step})
     assert ck.all_steps() == [20, 30]  # keep=2
     restored, meta, step = ck.restore(tree)
     assert step == 30 and meta["note"] == 30
