@@ -3,7 +3,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test test-fast test-slow lint analyze analyze-fast bench bench-smoke bench-kernels cache-smoke bench-baseline ci quickstart
+.PHONY: test test-fast test-slow lint analyze analyze-fast bench bench-smoke bench-kernels cache-smoke bench-slo docs-check bench-baseline ci quickstart
 
 # Tier-1: the full suite, fail-fast, exactly as the roadmap runs it.
 test:
@@ -56,14 +56,26 @@ bench-kernels:
 cache-smoke:
 	$(PY) benchmarks/cache_smoke.py
 
+# Serving tail-latency gate (docs/SERVING.md): interactive-tenant p99
+# under a straggler tenant, priority/round-robin vs FIFO, >= 2x floor.
+bench-slo:
+	$(PY) benchmarks/bench_slo.py --smoke --json BENCH_slo_ci.json
+	$(PY) benchmarks/compare_baseline.py BENCH_slo_ci.json benchmarks/baselines/BENCH_slo_ci.json
+
+# Docs health: internal links resolve and every quoted `python -m`
+# invocation still parses --help (tools/check_docs.py).
+docs-check:
+	$(PY) tools/check_docs.py
+
 # Refresh the committed bench baselines from this machine's smoke run.
 bench-baseline:
 	$(PY) benchmarks/bench_scan_kernels.py --smoke --json benchmarks/baselines/BENCH_ci.json
 	$(PY) benchmarks/bench_registration_e2e.py --smoke --json benchmarks/baselines/BENCH_e2e_ci.json
 	$(PY) benchmarks/bench_serve.py --smoke --json benchmarks/baselines/BENCH_serve_ci.json
+	$(PY) benchmarks/bench_slo.py --smoke --json benchmarks/baselines/BENCH_slo_ci.json
 
 # Everything .github/workflows/ci.yml gates on, in one local target.
-ci: lint analyze test-fast bench-smoke
+ci: lint analyze test-fast bench-smoke docs-check bench-slo
 
 quickstart:
 	$(PY) examples/quickstart.py

@@ -1,0 +1,174 @@
+"""SLO benchmark: interactive-tenant tail latency under a straggler tenant.
+
+The serving front end exists so one long batch series cannot starve an
+interactive caller of the shared runtime (ISSUE 8 / ROADMAP item 1).  This
+benchmark measures exactly that, with the queue_flex/MICA methodology
+(SNIPPETS.md Snippet 3): **open-loop** Poisson arrivals for the
+interactive tenant, a closed-loop straggler tenant keeping its queue
+permanently full of long requests, and the comparison made on **p99
+latency**, never mean throughput.
+
+One scenario, four arms over a single-dispatcher front end (the clean
+single-server queueing model):
+
+* ``fifo``             — global arrival order: interactive requests queue
+  behind the straggler's whole backlog.  This is the baseline a dispatch
+  policy must beat.
+* ``rr``               — per-tenant round-robin, no priority lane.
+* ``sewf``             — shortest-expected-work-first from the cost EMAs.
+* ``priority_rr``      — round-robin with the interactive tenant in the
+  high-priority lane (the recommended production setting).
+
+Gate (wired into CI via compare_baseline.py): the ``priority_rr`` arm's
+interactive p99 must beat FIFO's by >= 2x — the ``p99_speedup`` derived
+ratio has a hard FLOOR of 2.0 and its committed baseline is hand-clamped
+low so RATIO_SLACK stays meaningful on slow shared runners.
+
+Service times are ``time.sleep`` stand-ins (GIL-free, like real operator
+applications in jax) so the benchmark measures queueing policy, not
+operator throughput; ``bench_serve.py`` covers real-session overheads.
+
+Usage: PYTHONPATH=src python benchmarks/bench_slo.py [--smoke] [--json out]
+"""
+
+from __future__ import annotations
+
+import time
+
+BATCH_TENANT = "overnight-batch"
+INTERACTIVE_TENANT = "scope"
+
+
+def _run_arm(
+    *,
+    policy: str,
+    interactive_priority: bool,
+    batch_service_s: float,
+    interactive_service_s: float,
+    batch_depth: int,
+    rate_hz: float,
+    duration_s: float,
+    seed: int,
+):
+    """One policy arm: straggler tenant saturating, interactive open-loop."""
+    from repro.runtime.scheduler import spawn_daemon
+    from repro.serving import (
+        AdmissionError,
+        FrontendConfig,
+        RegistrationFrontend,
+        poisson_arrivals,
+        run_open_loop,
+    )
+
+    fe = RegistrationFrontend(
+        FrontendConfig(policy=policy, dispatch_workers=1, queue_depth=64)
+    )
+    fe.add_tenant(BATCH_TENANT, queue_depth=batch_depth)
+    fe.add_tenant(INTERACTIVE_TENANT, interactive=interactive_priority)
+
+    stop = [False]
+
+    def _feeder():
+        # Closed-loop straggler: keep the batch queue at its admission
+        # bound for the whole run; rejection just means "still full".
+        while not stop[0]:
+            try:
+                fe.call(BATCH_TENANT, lambda: time.sleep(batch_service_s),
+                        kind="batch")
+            except AdmissionError:
+                time.sleep(batch_service_s / 4)
+            except RuntimeError:
+                return  # frontend closed under us at arm teardown
+
+    feeder = spawn_daemon(_feeder, name="bench-slo-feeder")
+    # Let the straggler backlog build before offering interactive load.
+    while fe.stats()["tenants"][BATCH_TENANT]["queued"] < batch_depth:
+        time.sleep(0.005)
+
+    arrivals = poisson_arrivals(rate_hz, duration_s, seed=seed)
+    result = run_open_loop(
+        lambda: fe.call(INTERACTIVE_TENANT,
+                        lambda: time.sleep(interactive_service_s)),
+        arrivals,
+        drain_timeout_s=max(10.0, 4 * batch_depth * batch_service_s),
+    )
+    stop[0] = True
+    fe.close()
+    feeder.join(1.0)
+    return result
+
+
+def _best_of(reps: int, **arm_kwargs):
+    """Best (lowest interactive p99) of ``reps`` identical runs.
+
+    A single OS-scheduler stall of the dispatcher thread lands squarely on
+    a small sample's p99; replaying the identical arrival schedule and
+    keeping the best run measures the policy, not the runner's hiccups.
+    """
+    best = None
+    for _ in range(reps):
+        res = _run_arm(**arm_kwargs)
+        if best is None or (res.latency.percentile(99)
+                            < best.latency.percentile(99)):
+            best = res
+    return best
+
+
+def run(smoke: bool = False):
+    if smoke:
+        batch_s, inter_s = 0.02, 0.002
+        batch_depth, rate_hz, duration_s = 6, 40.0, 2.5
+    else:
+        batch_s, inter_s = 0.025, 0.002
+        batch_depth, rate_hz, duration_s = 8, 40.0, 6.0
+
+    arms = {
+        "fifo": dict(policy="fifo", interactive_priority=False),
+        "rr": dict(policy="round_robin", interactive_priority=False),
+        "sewf": dict(policy="sewf", interactive_priority=False),
+        "priority_rr": dict(policy="round_robin", interactive_priority=True),
+    }
+    results = {}
+    for name, arm in arms.items():
+        results[name] = _best_of(
+            2,
+            batch_service_s=batch_s,
+            interactive_service_s=inter_s,
+            batch_depth=batch_depth,
+            rate_hz=rate_hz,
+            duration_s=duration_s,
+            seed=17,
+            **arm,
+        )
+
+    rows = []
+    fifo_p99 = results["fifo"].latency.percentile(99)
+    for name, res in results.items():
+        s = res.latency.summary()
+        derived = (
+            f"p99_ms={s['p99_s'] * 1e3:.2f};"
+            f"p50_ms={s['p50_s'] * 1e3:.2f};"
+            f"wait_p99_ms={res.wait.percentile(99) * 1e3:.2f};"
+            f"completed={res.completed};rejected={res.rejected}"
+        )
+        if name == "priority_rr":
+            p99 = s["p99_s"]
+            ratio = fifo_p99 / p99 if p99 > 0 else float("inf")
+            derived = (
+                f"p99_speedup={ratio:.2f}x;meets_2x={ratio >= 2.0};" + derived
+            )
+        rows.append((f"slo_{name}_interactive", s["p99_s"] * 1e6, derived))
+    return rows
+
+
+def main():
+    try:
+        from _cli import bench_cli          # script: python benchmarks/...
+    except ImportError:
+        from ._cli import bench_cli         # package: benchmarks.run
+
+    bench_cli("slo", run)
+
+
+if __name__ == "__main__":
+    main()

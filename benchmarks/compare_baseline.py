@@ -48,6 +48,12 @@ FLOORS = {
     # on slow shared runners; these floors are the true acceptance bars.
     "device_speedup": 1.5,
     "warm_speedup": 2.0,
+    # Serving acceptance (bench_slo.py): with a straggler tenant saturating
+    # the front end, the priority/round-robin policy's interactive p99 must
+    # beat FIFO's by >= 2x.  This floor IS the ISSUE 8 acceptance bar; the
+    # committed baseline ratio is hand-clamped to 3.0 (measured 5.5-7.6x)
+    # so RATIO_SLACK keeps margin on slow runners.
+    "p99_speedup": 2.0,
 }
 RATIO_KEYS = ("speedup", "S'", "S_vs_static")
 

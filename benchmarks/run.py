@@ -18,6 +18,7 @@ from . import (
     bench_registration_e2e,
     bench_scan_kernels,
     bench_serve,
+    bench_slo,
     bench_strong_scaling,
     bench_weak_scaling,
     bench_work_energy,
@@ -34,6 +35,7 @@ SUITES = {
     "registration_e2e": bench_registration_e2e,  # paper Figs. 1/9 (real time)
     "scan_kernels": bench_scan_kernels,      # in-model scan paths (real time)
     "serve": bench_serve,                    # resident runtime / sessions
+    "slo": bench_slo,                        # serving tail latency (ISSUE 8)
     "roofline": roofline,                    # dry-run roofline table
 }
 

@@ -40,7 +40,11 @@ class ServeConfig:
     smoke: bool = True
     max_batch: int = 4
     max_len: int = 512
-    eos_id: int = 1
+    # End-of-sequence token: a request stops as soon as it emits this id
+    # (the eos is kept as the last output token), and the step-locked decode
+    # loop exits early once every request in the batch is finished.  None
+    # disables eos detection (all requests run to their max_new).
+    eos_id: Optional[int] = 1
 
 
 class Server:
@@ -63,8 +67,31 @@ class Server:
             )
         return batch
 
+    def _init_states(self, b: int):
+        """Fresh decode states for a batch of ``b``; returns (prefix, states).
+
+        ``prefix`` is the number of frontend positions prepended before the
+        prompt tokens (patch frontends decode after their patch block).
+        Split out of :meth:`serve_batch` so tests can stub the jitted model
+        steps without touching state allocation.
+        """
+        prefix = self.acfg.frontend_len if self.acfg.frontend == "patch" else 0
+        return prefix, lm.init_decode_states(
+            self.acfg, b, prefix + self.cfg_s.max_len
+        )
+
     def serve_batch(self, requests: List[Request]) -> Dict[str, Any]:
-        """Prefill + decode one batch of requests; returns timing stats."""
+        """Prefill + decode one batch of requests; returns timing stats.
+
+        Step-locked greedy decode: all sequences advance together, but each
+        request stops accumulating output once it emits ``cfg_s.eos_id``
+        (kept as its final token) or reaches its own ``max_new``, and the
+        whole loop exits as soon as every request is finished — a batch of
+        early-eos requests does not pay for the global ``max_new``.
+        ``tokens_per_s`` counts tokens actually delivered, not batch slots.
+        Blocking (runs the model to completion on the caller's thread);
+        timings are wall-clock seconds.
+        """
         cfg, cfg_s = self.acfg, self.cfg_s
         b = len(requests)
         lp = max(len(r.prompt) for r in requests)
@@ -72,35 +99,50 @@ class Server:
         prompts = np.zeros((b, lp), np.int32)
         for i, r in enumerate(requests):
             prompts[i, -len(r.prompt):] = r.prompt  # left-pad
-        prefix = cfg.frontend_len if cfg.frontend == "patch" else 0
-        states = lm.init_decode_states(cfg, b, prefix + cfg_s.max_len)
+        prefix, states = self._init_states(b)
         batch = {"tokens": jnp.asarray(prompts), **self._extras(b)}
         t0 = time.time()
         logits, states = self._prefill(self.params, batch, states)
-        logits.block_until_ready()
+        jax.block_until_ready(logits)
         t_prefill = time.time() - t0
         tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
         outs = [[int(tok[i, 0])] for i in range(b)]
+        eos = cfg_s.eos_id
+
+        def finished(i: int) -> bool:
+            o = outs[i]
+            return len(o) >= requests[i].max_new or (
+                eos is not None and o[-1] == eos
+            )
+
         max_new = max(r.max_new for r in requests)
         t0 = time.time()
         pos = prefix + lp
+        steps_run = 0
         for step in range(max_new - 1):
+            if all(finished(i) for i in range(b)):
+                break  # every request hit eos or its own max_new
             logits, states = self._decode(
                 self.params, tok, jnp.int32(pos + step), states
             )
             tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+            steps_run += 1
             for i in range(b):
-                outs[i].append(int(tok[i, 0]))
+                if not finished(i):
+                    outs[i].append(int(tok[i, 0]))
         jax.block_until_ready(tok)
         t_decode = time.time() - t0
         for r, o in zip(requests, outs):
-            r.output = o[: r.max_new]
+            r.output = o
             r.done = True
+        generated = sum(len(o) for o in outs)
         return {
             "batch": b,
             "prefill_s": t_prefill,
             "decode_s": t_decode,
-            "tokens_per_s": b * max_new / t_decode if t_decode > 0 else 0.0,
+            "decode_steps": steps_run,
+            "generated": generated,
+            "tokens_per_s": generated / t_decode if t_decode > 0 else 0.0,
         }
 
 

@@ -122,8 +122,18 @@ def register_series(
     ingest, prefetched ``cfg.prefetch_depth`` chunks ahead).  ``pool``:
     optional :class:`~repro.runtime.scheduler.WorkerPool` (the process-wide
     shared pool by default).  Returns cumulative deformations phi_{0,i}
-    aligning every frame to frame 0, with per-stage timings and operator
+    aligning every frame to frame 0, with per-stage timings (wall-clock
+    seconds — see :class:`~repro.service.SeriesResult`) and operator
     telemetry.
+
+    Blocking: runs the whole pipeline on the calling thread (pool workers
+    help with scan tasks) and returns only when every frame has folded in.
+    Re-entrant and thread-safe — each call owns a private session; only
+    the worker pool (and, for anonymous configs, the process-global
+    telemetry channel) is shared.  For admission control, tenant
+    isolation or latency accounting over concurrent callers, use
+    :class:`repro.serving.RegistrationFrontend` instead of calling this
+    from many threads.
     """
     if cfg is None:
         cfg = RegisterSeriesConfig()

@@ -15,6 +15,13 @@ that with one shared, long-lived executor:
   series' phase: segment reduces, stealing workers, interval applies) and
   workers claim tasks round-robin **across groups**, so a 4096-frame series
   cannot starve a 16-frame one that arrived later;
+* **priority lanes** — ``run_tasks(..., priority=)`` places a group in a
+  claim lane; at every yield point between tasks, workers claim from the
+  highest non-empty lane exclusively (round-robin *within* a lane), and a
+  task inherits its group's lane for the nested groups it submits.  The
+  serving front end (``repro.serving``) runs interactive tenants'
+  ``feed``/``result`` scans under :func:`at_priority` so they jump ahead
+  of long batch series without interrupting a task mid-flight;
 * **caller helping** — the submitting thread drains its own group while it
   waits.  This makes nested submission (a segment task whose
   ``stealing_reduce`` submits its thread tasks) deadlock-free by
@@ -56,11 +63,16 @@ class _TaskGroup:
     All mutation happens under the owning pool's condition lock.
     """
 
-    __slots__ = ("fns", "label", "next", "completed", "results", "errors")
+    __slots__ = (
+        "fns", "label", "next", "completed", "results", "errors", "priority",
+    )
 
-    def __init__(self, fns: List[Callable[[], Any]], label: str):
+    def __init__(
+        self, fns: List[Callable[[], Any]], label: str, priority: int = 0
+    ):
         self.fns = fns
         self.label = label
+        self.priority = priority            # claim lane (higher wins)
         self.next = 0                       # next unclaimed task index
         self.completed = 0
         self.results: List[Any] = [None] * len(fns)
@@ -71,6 +83,40 @@ class _TaskGroup:
 
     def done(self) -> bool:
         return self.completed == len(self.fns)
+
+
+# Thread-local claim-lane level: a task executing on a worker inherits its
+# group's priority, so the nested groups it submits (a segment task's
+# stealing_reduce thread tasks, its phase-3 interval applies) land in the
+# same lane as the scan that spawned them.  Without inheritance only the
+# top-level segment group of an interactive scan would jump the lane and
+# every nested phase would queue behind batch work again.
+_task_priority = threading.local()
+
+
+def current_priority() -> int:
+    """The claim-lane priority ``run_tasks`` uses when none is passed:
+    the priority of the group whose task this thread is executing, or 0."""
+    return getattr(_task_priority, "value", 0)
+
+
+@contextlib.contextmanager
+def at_priority(level: int):
+    """Run this thread's pool submissions at claim-lane ``level``.
+
+    The serving front end wraps interactive requests in
+    ``with at_priority(INTERACTIVE_PRIORITY):`` — every ``run_tasks`` the
+    wrapped scan performs (and, via inheritance, every nested group its
+    worker tasks submit) claims ahead of priority-0 batch work at the
+    pool's yield points.  Purely cooperative: a task already executing is
+    never interrupted.
+    """
+    prev = current_priority()
+    _task_priority.value = level
+    try:
+        yield
+    finally:
+        _task_priority.value = prev
 
 
 class WorkerPool:
@@ -112,11 +158,22 @@ class WorkerPool:
             want -= 1
 
     def _claim_locked(self):
-        """Claim the next task fairly: round-robin across active groups."""
+        """Claim the next task: priority lane first, round-robin within it.
+
+        Groups in the highest non-empty priority lane are claimed from
+        exclusively (an interactive ``result()``'s tasks jump every queued
+        batch segment); groups sharing a lane keep the fair round-robin
+        admission.  Each claim boundary is the pool's cooperative *yield
+        point*: a worker finishing one segment task of a long batch scan
+        re-enters here, sees the higher lane, and picks up the interactive
+        work before touching the batch group's remaining tasks.
+        """
         self._groups = [g for g in self._groups if g.unclaimed() > 0]
         if not self._groups:
             return None
-        g = self._groups[self._rr % len(self._groups)]
+        top = max(g.priority for g in self._groups)
+        lane = [g for g in self._groups if g.priority == top]
+        g = lane[self._rr % len(lane)]
         self._rr += 1
         idx = g.next
         g.next += 1
@@ -145,10 +202,14 @@ class WorkerPool:
                 self._claimed += 1
             group, idx = claim
             err = result = None
+            prev_prio = current_priority()
+            _task_priority.value = group.priority
             try:
                 result = group.fns[idx]()
             except BaseException as e:  # noqa: BLE001 — re-raised at run_tasks
                 err = e
+            finally:
+                _task_priority.value = prev_prio
             with self._cond:
                 self._claimed -= 1
                 self._complete_locked(group, idx, result, err)
@@ -156,7 +217,11 @@ class WorkerPool:
     # ------------------------------------------------------------- submit
 
     def run_tasks(
-        self, fns: Sequence[Callable[[], Any]], *, label: str = "tasks"
+        self,
+        fns: Sequence[Callable[[], Any]],
+        *,
+        label: str = "tasks",
+        priority: Optional[int] = None,
     ) -> List[Any]:
         """Run ``fns`` to completion, return their results in order.
 
@@ -164,11 +229,22 @@ class WorkerPool:
         caller helps drain its own group while waiting), so nested
         ``run_tasks`` from inside a task cannot deadlock.  The first task
         exception is re-raised here after the whole group has settled.
+
+        ``priority`` selects the claim lane (default: the caller's
+        inherited :func:`current_priority`, 0 outside any task).  Higher
+        lanes are claimed from exclusively at every yield point between
+        tasks; admission within a lane stays round-robin fair.  Priority
+        is cooperative — it never interrupts a task already executing —
+        and a sustained higher lane starves lower ones by design (the
+        serving front end bounds how long it keeps a lane elevated).
         """
         fns = list(fns)
         if not fns:
             return []
-        group = _TaskGroup(fns, label)
+        group = _TaskGroup(
+            fns, label,
+            current_priority() if priority is None else priority,
+        )
         with self._cond:
             if self._shutdown:
                 raise RuntimeError(f"pool {self.name!r} is shut down")
@@ -193,10 +269,17 @@ class WorkerPool:
                     self._cond.wait(timeout=0.1)
                     continue
             err = result = None
+            # Helper-claimed tasks run in the group's lane too: a nested
+            # submission from a helper must inherit the same priority it
+            # would have inherited on a worker.
+            prev_prio = current_priority()
+            _task_priority.value = group.priority
             try:
                 result = group.fns[idx]()
             except BaseException as e:  # noqa: BLE001 — re-raised below
                 err = e
+            finally:
+                _task_priority.value = prev_prio
             with self._cond:
                 self._claimed -= 1
                 self._complete_locked(group, idx, result, err)
@@ -289,7 +372,11 @@ class TransientPool:
         self.threads_spawned = 0
 
     def run_tasks(
-        self, fns: Sequence[Callable[[], Any]], *, label: str = "tasks"
+        self,
+        fns: Sequence[Callable[[], Any]],
+        *,
+        label: str = "tasks",
+        priority: Optional[int] = None,
     ) -> List[Any]:
         fns = list(fns)
         if not fns:

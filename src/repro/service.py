@@ -114,11 +114,32 @@ class RegisterSeriesConfig:
 @dataclasses.dataclass
 class SeriesResult:
     """Everything :func:`repro.register_series` / ``session.result()``
-    produce."""
+    produce.
+
+    ``timings`` maps pipeline stage -> cumulative wall-clock **seconds**
+    spent in that stage over the session's whole life (a ``result()``
+    mid-stream reports the seconds so far, and later results include the
+    earlier work):
+
+    * ``ingest``     — slicing/stacking fed chunks into frame pairs;
+    * ``compile``    — XLA trace/compile time for the vmapped function-A
+      cohorts (kept out of ``preprocess`` so cost telemetry and speedup
+      numbers are not poisoned by one-off compilation);
+    * ``preprocess`` — function A proper: batched pairwise registration of
+      new frame pairs (paper §3's element construction);
+    * ``scan``       — the (.)_B prefix scan over elements (work-stealing /
+      hierarchical / sequential, whichever the dispatcher chose);
+    * ``compose``    — batching per-element deformations into the stacked
+      ``Deformation`` output.
+
+    A plain dataclass of already-materialised values: safe to read from
+    any thread once returned, and never mutated by the session afterwards
+    (``timings`` is a copy).
+    """
 
     deformations: Deformation            # batched phi_{0,i}, identity at i=0
     elements: List[RegElement]           # scan output, N-1 entries
-    timings: Dict[str, float]            # per-stage seconds
+    timings: Dict[str, float]            # per-stage wall seconds (see above)
     backend: str                         # backend that executed the scan
     op_telemetry: Dict[str, float]       # adapter cost statistics
     scan_stats: Optional[Any] = None     # HierStats when hierarchical ran
@@ -257,9 +278,22 @@ _session_ids = itertools.count()
 class SeriesSession:
     """One resident series: feed chunks, read results, extend, recover.
 
-    Sessions are *not* thread-safe for concurrent ``feed`` calls on the
-    same session (a series is one ordered stream); many sessions are safe
-    concurrently — that is the point of the shared pool.
+    **Thread-safety.**  A series is one ordered stream: concurrent
+    ``feed``/``extend`` calls on the *same* session are serialized by an
+    internal lock (their completion order is then unspecified, which is
+    almost never what a caller wants — submit in order from one thread,
+    or route through :class:`repro.serving.RegistrationFrontend`, which
+    guarantees per-session FIFO).  Many sessions on the shared pool are
+    safe and intended.  ``result()`` may race a concurrent ``feed`` only
+    in that it reports whichever prefix has fully folded in.
+
+    **Blocking.**  ``feed``/``result``/``extend``/``checkpoint`` all run
+    their compute synchronously on the calling thread (plus pool workers)
+    and return only when done — there is no internal queue.  The serving
+    front end is the async layer.
+
+    **Units.**  All timing fields are wall-clock seconds (see
+    :class:`SeriesResult` for the per-stage breakdown).
     """
 
     def __init__(
@@ -332,6 +366,11 @@ class SeriesSession:
         elements *seeded* with the retained cumulative element — O(new)
         operator applications however long the series already is.  Empty
         chunks (ragged stream tails) are skipped.
+
+        Blocking: returns after the chunk has fully folded in (preprocess
+        + scan), typically the most expensive call on a session.  Safe to
+        call from one thread at a time; overlapping callers serialize on
+        the session's feed lock.
         """
         self._check_open()
         with self._feed_lock:
@@ -522,6 +561,11 @@ class SeriesSession:
 
         Does *not* finalize the session: ``feed``/``extend`` keep working
         afterwards (a frame arriving after completion folds in at O(new)).
+
+        Blocking, but cheap relative to ``feed`` — it only stacks the
+        retained per-element deformations (the ``compose`` timing stage);
+        no operator applications happen here.  The returned object is a
+        snapshot: safe to hand to other threads.
         """
         self._check_open()
         if not self._elements:

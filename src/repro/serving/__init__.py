@@ -1,0 +1,59 @@
+"""Registration-as-a-service: SLO-aware front end over the shared runtime.
+
+Public surface:
+
+* :class:`RegistrationFrontend` / :class:`FrontendConfig` — admission
+  (bounded per-tenant queues, reject-not-block), pluggable dispatch,
+  priority lanes over the shared WorkerPool.
+* :mod:`~repro.serving.policies` — ``fifo`` / ``round_robin`` / ``sewf``
+  dispatch policies and the :class:`~repro.serving.policies.QueueView`
+  protocol for writing new ones.
+* :mod:`~repro.serving.loadgen` — open-loop Poisson load generation and
+  HDR-style latency histograms (what ``benchmarks/bench_slo.py`` runs).
+
+See docs/SERVING.md for the operator's guide.
+"""
+
+from repro.serving.frontend import (
+    INTERACTIVE_PRIORITY,
+    AdmissionError,
+    FrontendClosedError,
+    FrontendConfig,
+    RegistrationFrontend,
+    Ticket,
+)
+from repro.serving.loadgen import (
+    LatencyHistogram,
+    LoadResult,
+    poisson_arrivals,
+    run_open_loop,
+)
+from repro.serving.policies import (
+    DispatchPolicy,
+    FifoPolicy,
+    QueueView,
+    RoundRobinPolicy,
+    ShortestExpectedWorkPolicy,
+    get_policy,
+    policy_names,
+)
+
+__all__ = [
+    "AdmissionError",
+    "DispatchPolicy",
+    "FifoPolicy",
+    "FrontendClosedError",
+    "FrontendConfig",
+    "INTERACTIVE_PRIORITY",
+    "LatencyHistogram",
+    "LoadResult",
+    "QueueView",
+    "RegistrationFrontend",
+    "RoundRobinPolicy",
+    "ShortestExpectedWorkPolicy",
+    "Ticket",
+    "get_policy",
+    "policy_names",
+    "poisson_arrivals",
+    "run_open_loop",
+]

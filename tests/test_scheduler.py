@@ -254,3 +254,103 @@ def test_hierarchical_scan_runs_on_injected_pool():
     assert pool.tasks_completed > 0
     assert pool.groups_submitted >= 2  # segment reduces + interval applies
     pool.shutdown()
+
+
+# ------------------------------------------------------- priority lanes
+
+
+def test_claim_order_prefers_higher_lane_then_round_robins():
+    """White-box: the claim loop drains the highest non-empty priority
+    lane exclusively, round-robin *within* the lane, before touching
+    lower lanes."""
+    from repro.runtime.scheduler import _TaskGroup
+
+    pool = WorkerPool(max_workers=0, name="lane-test")
+    lo_a = _TaskGroup([lambda: "la"] * 2, "lo_a", priority=0)
+    lo_b = _TaskGroup([lambda: "lb"] * 2, "lo_b", priority=0)
+    hi = _TaskGroup([lambda: "hi"] * 2, "hi", priority=10)
+    order = []
+    with pool._cond:
+        pool._groups.extend([lo_a, lo_b, hi])
+        claim = pool._claim_locked()
+        while claim is not None:
+            group, _ = claim
+            order.append(group.label)
+            claim = pool._claim_locked()
+    assert order[:2] == ["hi", "hi"]          # high lane drained first
+    assert sorted(order[2:]) == ["lo_a"] * 2 + ["lo_b"] * 2
+    assert order[2] != order[3]               # round-robin within the lane
+    pool.shutdown()
+
+
+def test_late_high_priority_group_jumps_queued_low_work():
+    """A high-priority group submitted after low work is queued is claimed
+    at the next yield point, ahead of the remaining low tasks."""
+    from repro.runtime.scheduler import _TaskGroup
+
+    pool = WorkerPool(max_workers=0, name="lane-test2")
+    lo = _TaskGroup([lambda: "lo"] * 4, "lo", priority=0)
+    with pool._cond:
+        pool._groups.append(lo)
+        first, _ = pool._claim_locked()
+        assert first.label == "lo"
+        pool._groups.append(_TaskGroup([lambda: "hi"], "hi", priority=5))
+        jumped, _ = pool._claim_locked()
+        assert jumped.label == "hi"
+    pool.shutdown()
+
+
+def test_run_tasks_inherits_and_propagates_priority():
+    """Tasks observe their group's priority via current_priority(), and
+    nested submissions inherit it — on workers and on helping callers."""
+    from repro.runtime.scheduler import at_priority, current_priority
+
+    pool = WorkerPool(max_workers=2, name="prio-inherit")
+    seen = {}
+
+    def outer():
+        seen["outer"] = current_priority()
+        pool.run_tasks(
+            [lambda: seen.setdefault("nested", current_priority())],
+            label="nested",
+        )
+
+    pool.run_tasks([outer], label="outer", priority=7)
+    assert seen == {"outer": 7, "nested": 7}
+
+    assert current_priority() == 0
+    with at_priority(3):
+        assert current_priority() == 3
+        seen2 = pool.run_tasks([current_priority], label="ctx")
+        with at_priority(9):
+            assert current_priority() == 9
+        assert current_priority() == 3
+    assert current_priority() == 0
+    assert seen2 == [3]
+    pool.shutdown()
+
+
+def test_priority_zero_default_keeps_fair_admission():
+    """Default submissions all land in lane 0 and keep the existing fair
+    round-robin interleave (no behaviour change for non-serving callers)."""
+    pool = WorkerPool(max_workers=1, name="lane0")
+    starts = []
+    barrier = threading.Event()
+
+    def make(tag):
+        def fn():
+            starts.append(tag)
+            barrier.wait(5)
+        return fn
+
+    ta = threading.Thread(
+        target=lambda: pool.run_tasks([make("a")] * 3, label="ga"))
+    tb = threading.Thread(
+        target=lambda: pool.run_tasks([make("b")] * 3, label="gb"))
+    ta.start(); tb.start()
+    time.sleep(0.15)
+    barrier.set()
+    ta.join(10); tb.join(10)
+    # Both groups made progress interleaved; nothing starved.
+    assert sorted(starts) == ["a"] * 3 + ["b"] * 3
+    pool.shutdown()

@@ -1,0 +1,413 @@
+"""Serving front end: admission, dispatch policies, priority/preemption,
+and the open-loop load generator — all deterministic (fake clock / manual
+dispatch) except the one end-to-end preemption test, which is event-gated.
+
+The three ISSUE 8 acceptance scenarios live here:
+  (a) a full tenant queue rejects rather than blocks;
+  (b) round-robin bounds any tenant's wait to O(#tenants) dispatch turns
+      under a straggler tenant while FIFO's wait grows with the straggler's
+      queue depth;
+  (c) a high-priority ``result()`` completes while a long batch series is
+      mid-scan on the shared pool.
+"""
+
+import threading
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+import repro.service as service
+from repro.core.registration import RegResult
+from repro.runtime.scheduler import WorkerPool, current_priority
+from repro.serving import (
+    AdmissionError,
+    FrontendClosedError,
+    FrontendConfig,
+    LatencyHistogram,
+    RegistrationFrontend,
+    get_policy,
+    poisson_arrivals,
+    policy_names,
+    run_open_loop,
+)
+
+
+class FakeClock:
+    """Deterministic time source: advances only when told to."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+def _manual_frontend(policy="fifo", **cfg_kw):
+    clk = FakeClock()
+    fe = RegistrationFrontend(
+        FrontendConfig(policy=policy, **cfg_kw),
+        clock=clk, auto_dispatch=False,
+    )
+    return fe, clk
+
+
+# ------------------------------------------------------------- admission
+
+
+def test_full_queue_rejects_not_blocks():
+    fe, clk = _manual_frontend(queue_depth=3)
+    fe.add_tenant("a")
+    fe.add_tenant("b")
+    for _ in range(3):
+        fe.call("a", lambda: None)
+    # 4th submit must raise immediately (nothing is dispatching, so a
+    # blocking implementation would hang here forever).
+    with pytest.raises(AdmissionError) as exc:
+        fe.call("a", lambda: None)
+    assert exc.value.tenant == "a" and exc.value.depth == 3
+    # A full tenant never affects another tenant's admission.
+    t = fe.call("b", lambda: 42)
+    assert fe.stats()["tenants"]["a"]["rejected"] == 1
+    assert fe.stats()["tenants"]["b"]["rejected"] == 0
+    while fe.dispatch_one():
+        pass
+    assert t.result() == 42
+    fe.close()
+
+
+def test_per_tenant_depth_overrides_default():
+    fe, _ = _manual_frontend(queue_depth=8)
+    fe.add_tenant("small", queue_depth=1)
+    fe.call("small", lambda: None)
+    with pytest.raises(AdmissionError):
+        fe.call("small", lambda: None)
+    fe.close()
+
+
+def test_unknown_and_duplicate_tenants_raise():
+    fe, _ = _manual_frontend()
+    fe.add_tenant("a")
+    with pytest.raises(ValueError, match="already registered"):
+        fe.add_tenant("a")
+    with pytest.raises(ValueError, match="unknown tenant"):
+        fe.call("ghost", lambda: None)
+    with pytest.raises(ValueError, match="unknown session"):
+        fe.feed("a", "no-such-session", [])
+    fe.close()
+
+
+def test_config_validation():
+    with pytest.raises(ValueError):
+        FrontendConfig(queue_depth=0)
+    with pytest.raises(ValueError):
+        FrontendConfig(dispatch_workers=-1)
+    with pytest.raises(ValueError, match="unknown dispatch policy"):
+        get_policy("lifo")
+    assert policy_names() == ["fifo", "round_robin", "sewf"]
+
+
+# ------------------------------------- dispatch policies (fake clock)
+
+
+def _straggler_run(policy, depth):
+    """One straggler tenant with ``depth`` queued 1s requests, then one
+    request each from two interactive-ish tenants; drain and return the
+    two latecomers' tickets."""
+    fe, clk = _manual_frontend(policy=policy, queue_depth=depth + 4)
+    fe.add_tenant("bulk")
+    fe.add_tenant("alice")
+    fe.add_tenant("bob")
+    for _ in range(depth):
+        fe.call("bulk", lambda: clk.advance(1.0))
+    ta = fe.call("alice", lambda: clk.advance(0.01))
+    tb = fe.call("bob", lambda: clk.advance(0.01))
+    while fe.dispatch_one():
+        pass
+    fe.close()
+    return ta, tb
+
+
+@pytest.mark.parametrize("depth", [4, 12])
+def test_fifo_wait_grows_with_straggler_depth(depth):
+    ta, tb = _straggler_run("fifo", depth)
+    # FIFO: the latecomers queue behind the straggler's whole backlog.
+    assert ta.turns_waited == depth
+    assert tb.turns_waited == depth + 1
+    assert ta.queue_wait_s == pytest.approx(depth * 1.0, abs=0.1)
+
+
+@pytest.mark.parametrize("depth", [4, 12])
+def test_round_robin_bounds_wait_to_tenant_count(depth):
+    n_tenants = 3
+    ta, tb = _straggler_run("round_robin", depth)
+    # Round-robin: one straggler turn per cycle, so any tenant's head
+    # waits at most one full cycle — O(#tenants), independent of depth.
+    assert ta.turns_waited <= n_tenants
+    assert tb.turns_waited <= n_tenants
+    assert ta.queue_wait_s <= n_tenants * 1.0 + 0.1
+
+
+def test_sewf_prefers_observed_cheap_tenant():
+    fe, clk = _manual_frontend(policy="sewf")
+    fe.add_tenant("cheap")
+    fe.add_tenant("pricey")
+    # Observe one completion each so both tenants have cost EMAs.
+    fe.call("cheap", lambda: clk.advance(0.001))
+    fe.call("pricey", lambda: clk.advance(5.0))
+    while fe.dispatch_one():
+        pass
+    # Now pricey arrives FIRST; sewf must still serve cheap's head first.
+    tp = fe.call("pricey", lambda: clk.advance(5.0))
+    tc = fe.call("cheap", lambda: clk.advance(0.001))
+    while fe.dispatch_one():
+        pass
+    assert tc.dispatch_turn < tp.dispatch_turn
+    fe.close()
+
+
+def test_priority_tenant_dispatches_first_and_executes_in_lane():
+    fe, clk = _manual_frontend(policy="fifo")
+    fe.add_tenant("batch")
+    fe.add_tenant("scope", interactive=True)
+    seen = {}
+    tb = fe.call("batch", lambda: seen.setdefault("batch", current_priority()))
+    ts = fe.call("scope", lambda: seen.setdefault("scope", current_priority()))
+    while fe.dispatch_one():
+        pass
+    # Interactive arrived later but dispatched first (higher lane)...
+    assert ts.dispatch_turn < tb.dispatch_turn
+    # ...and executed under at_priority, so its pool submissions would
+    # claim ahead of batch segment tasks too.
+    assert seen["scope"] == FrontendConfig().interactive_priority
+    assert seen["batch"] == 0
+    fe.close()
+
+
+def test_busy_session_defers_tenant_without_blocking_others():
+    fe, _ = _manual_frontend(policy="fifo")
+    fe.add_tenant("a")
+    fe.add_tenant("b")
+    # White-box: mark a's target session as mid-execution.
+    fe._busy.add("s1")
+    ta = fe._submit("a", "feed", lambda: "a", items=1, session_key="s1")
+    tb = fe._submit("b", "feed", lambda: "b", items=1, session_key="s2")
+    assert fe.dispatch_one()
+    assert tb.done and not ta.done  # a's head skipped, b ran
+    assert not fe.dispatch_one()    # a still blocked on its busy session
+    fe._busy.discard("s1")
+    assert fe.dispatch_one()
+    assert ta.result() == "a"
+    fe.close()
+
+
+# ------------------------------------------------------ tickets / close
+
+
+def test_ticket_error_propagates_and_counts():
+    fe, _ = _manual_frontend()
+    fe.add_tenant("a")
+
+    def boom():
+        raise RuntimeError("op failed")
+
+    t = fe.call("a", boom)
+    fe.dispatch_one()
+    with pytest.raises(RuntimeError, match="op failed"):
+        t.result()
+    assert fe.stats()["tenants"]["a"]["failed"] == 1
+    assert fe.stats()["tenants"]["a"]["completed"] == 0
+    fe.close()
+
+
+def test_ticket_result_timeout():
+    fe, _ = _manual_frontend()
+    fe.add_tenant("a")
+    t = fe.call("a", lambda: None)  # never dispatched
+    with pytest.raises(TimeoutError):
+        t.result(timeout=0.01)
+    fe.close()
+
+
+def test_close_fails_pending_tickets_and_rejects_new_work():
+    fe, _ = _manual_frontend()
+    fe.add_tenant("a")
+    pending = [fe.call("a", lambda: None) for _ in range(3)]
+    fe.close()
+    for t in pending:
+        assert t.done
+        with pytest.raises(FrontendClosedError):
+            t.result()
+    with pytest.raises(FrontendClosedError):
+        fe.call("a", lambda: None)
+    fe.close()  # idempotent
+
+
+# --------------------------------------------------------- end-to-end
+
+
+def _fake_register_pair(ref, tmpl, init=None, cfg=None):
+    shift = jnp.stack([ref[0, 0] - tmpl[0, 0], 0.5 * (ref[1, 1] - tmpl[1, 1])])
+    return RegResult(
+        {"angle": (ref[2, 3] - tmpl[3, 2]) * 1e-3, "shift": shift},
+        jnp.zeros(()),
+        jnp.asarray(3, jnp.int32),
+    )
+
+
+def _frames(n, seed, size=8):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal((n, size, size)), jnp.float32)
+
+
+def test_frontend_session_verbs_match_oneshot():
+    """feed/result/extend/close through the front end equal the one-shot
+    pipeline — the front end adds scheduling, never changes results."""
+    orig = service.register_pair
+    service.register_pair = _fake_register_pair
+    try:
+        frames = _frames(12, 3)
+        cfg = repro.RegisterSeriesConfig(refine=False)
+        ref = repro.register_series(frames, cfg)
+        with RegistrationFrontend(FrontendConfig(dispatch_workers=1)) as fe:
+            fe.add_tenant("scope", interactive=True)
+            sid = fe.open_series("scope", cfg)
+            fe.feed("scope", sid, frames[:5])
+            fe.feed("scope", sid, frames[5:9])
+            mid = fe.result("scope", sid).result(timeout=30)
+            assert mid.n_frames == 9
+            got = fe.extend("scope", sid, frames[9:]).result(timeout=30)
+            fe.close_series("scope", sid).result(timeout=30)
+        np.testing.assert_allclose(
+            np.asarray(got.deformations["shift"]),
+            np.asarray(ref.deformations["shift"]),
+            atol=1e-6, rtol=1e-6,
+        )
+    finally:
+        service.register_pair = orig
+
+
+def test_preemption_interactive_result_completes_mid_batch_scan():
+    """ISSUE 8 scenario (c): while a long batch series holds the shared
+    pool mid-scan (segment tasks gated on an event), an interactive
+    tenant's feed + result must still complete — via the priority lane
+    and the pool's caller-helping yield points."""
+    pool = WorkerPool(max_workers=2, name="serving-test")
+    fe = RegistrationFrontend(
+        FrontendConfig(policy="round_robin", dispatch_workers=2),
+        pool=pool,
+    )
+    fe.add_tenant("batch")
+    fe.add_tenant("scope", interactive=True)
+    gate = threading.Event()
+    scan_started = threading.Event()
+
+    def gated_segment():
+        scan_started.set()
+        assert gate.wait(30), "test gate never released"
+
+    batch_ticket = fe.call(
+        "batch", lambda: pool.run_tasks([gated_segment] * 8, label="batch"),
+    )
+    assert scan_started.wait(10)  # the batch series is now mid-scan
+
+    orig = service.register_pair
+    service.register_pair = _fake_register_pair
+    try:
+        frames = _frames(8, 5)
+        cfg = repro.RegisterSeriesConfig(refine=False)
+        sid = fe.open_series("scope", cfg)
+        fe.feed("scope", sid, frames)
+        res = fe.result("scope", sid).result(timeout=30)
+        assert res.n_frames == 8
+    finally:
+        service.register_pair = orig
+
+    assert not batch_ticket.done  # batch still gated: we truly preempted
+    gate.set()
+    batch_ticket.result(timeout=30)
+    fe.close()
+    pool.shutdown()
+
+
+# ----------------------------------------------------------- load gen
+
+
+def test_poisson_arrivals_deterministic_and_calibrated():
+    a = poisson_arrivals(50.0, 20.0, seed=9)
+    b = poisson_arrivals(50.0, 20.0, seed=9)
+    assert a == b
+    assert a == sorted(a) and a[-1] < 20.0
+    assert len(a) == pytest.approx(50.0 * 20.0, rel=0.15)
+    assert poisson_arrivals(50.0, 20.0, seed=10) != a
+    with pytest.raises(ValueError):
+        poisson_arrivals(0.0, 1.0)
+
+
+def test_histogram_percentiles_bounded_relative_error():
+    h = LatencyHistogram()
+    for v in [0.001] * 90 + [0.010] * 9 + [1.0]:
+        h.record(v)
+    assert h.count == 100
+    assert h.percentile(50) == pytest.approx(0.001, rel=0.07)
+    assert h.percentile(99) == pytest.approx(0.010, rel=0.07)
+    assert h.percentile(99.9) == pytest.approx(1.0, rel=0.07)
+    s = h.summary()
+    assert s["max_s"] == 1.0
+    assert s["mean_s"] == pytest.approx((0.09 + 0.09 + 1.0) / 100, rel=1e-6)
+    with pytest.raises(ValueError):
+        h.percentile(0.0)
+
+
+def test_histogram_merge():
+    a, b = LatencyHistogram(), LatencyHistogram()
+    a.record(0.001)
+    b.record(0.1)
+    a.merge(b)
+    assert a.count == 2
+    assert a.percentile(99) == pytest.approx(0.1, rel=0.07)
+
+
+def test_run_open_loop_on_fake_time():
+    """The whole load-generation path on a fake clock: scheduled arrivals,
+    inline dispatch, exact service times, zero real seconds slept."""
+    clk = FakeClock()
+    fe = RegistrationFrontend(
+        FrontendConfig(policy="fifo", queue_depth=64),
+        clock=clk, auto_dispatch=False,
+    )
+    fe.add_tenant("lg")
+
+    def submit():
+        t = fe.call("lg", lambda: clk.advance(0.004))
+        fe.dispatch_one()  # serve inline: wait ~0, service 4ms fake
+        return t
+
+    arrivals = [0.01 * i for i in range(100)]
+    res = run_open_loop(submit, arrivals, clock=clk, sleep=clk.advance)
+    assert res.completed == 100 and res.rejected == 0 and res.errors == 0
+    assert res.latency.percentile(50) == pytest.approx(0.004, rel=0.07)
+    assert res.service.percentile(50) == pytest.approx(0.004, rel=0.07)
+    assert res.offered_hz == pytest.approx(100 / 0.99, rel=0.01)
+    fe.close()
+
+
+def test_run_open_loop_counts_rejections():
+    clk = FakeClock()
+    fe = RegistrationFrontend(
+        FrontendConfig(queue_depth=2), clock=clk, auto_dispatch=False,
+    )
+    fe.add_tenant("lg")
+    # Nothing dispatches: after 2 admissions everything is rejected.
+    res = run_open_loop(
+        lambda: fe.call("lg", lambda: None),
+        [0.001 * i for i in range(10)],
+        drain_timeout_s=0.0, clock=clk, sleep=clk.advance,
+    )
+    assert res.rejected == 8
+    assert res.completed == 0
+    fe.close()

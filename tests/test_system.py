@@ -41,13 +41,91 @@ def test_train_restarts_from_checkpoint():
 
 @pytest.mark.slow
 def test_serve_batch():
-    srv = Server(ServeConfig(arch="xlstm-350m", smoke=True))
+    # eos_id=None: this test pins full-length batched decode; the eos
+    # early-exit path has its own deterministic tests below.
+    srv = Server(ServeConfig(arch="xlstm-350m", smoke=True, eos_id=None))
     rng = np.random.default_rng(0)
     reqs = [Request(i, rng.integers(2, 500, 16, dtype=np.int32), max_new=8)
             for i in range(3)]
     stats = srv.serve_batch(reqs)
     assert stats["batch"] == 3
+    assert stats["generated"] == 3 * 8
     assert all(r.done and len(r.output) == 8 for r in reqs)
+
+
+def _stub_server(eos_id, script):
+    """A Server with the jitted model steps replaced by a scripted decoder.
+
+    ``script[i]`` is the token sequence request ``i`` will greedily emit
+    (prefill produces ``script[i][0]``, each decode step the next entry;
+    the last entry repeats if the loop outruns the script).
+    """
+    vocab = 16
+    b = len(script)
+
+    def logits_for(step):
+        out = np.zeros((b, 1, vocab), np.float32)
+        for i, toks in enumerate(script):
+            out[i, 0, toks[min(step, len(toks) - 1)]] = 1.0
+        return out
+
+    srv = Server.__new__(Server)
+    srv.cfg_s = ServeConfig(eos_id=eos_id)
+    from types import SimpleNamespace
+
+    srv.acfg = SimpleNamespace(frontend="token", frontend_len=0)
+    srv.params = None
+    srv._init_states = lambda b: (0, None)
+    srv._prefill = lambda params, batch, states: (logits_for(0), states)
+    calls = []
+
+    def decode(params, tok, pos, states):
+        calls.append(int(pos))
+        return logits_for(len(calls)), states
+
+    srv._decode = decode
+    return srv, calls
+
+
+def test_serve_eos_early_exit():
+    """A request stops at its eos token and the step-locked loop exits as
+    soon as every request is done — not at the global max_new."""
+    eos = 7
+    # req 0 emits eos on its second token; req 1 never emits eos.
+    srv, calls = _stub_server(eos, [[3, eos, 5, 5, 5], [4, 5, 6, 5, 4]])
+    reqs = [Request(0, np.array([2, 3], np.int32), max_new=10),
+            Request(1, np.array([2, 3], np.int32), max_new=4)]
+    stats = srv.serve_batch(reqs)
+    assert reqs[0].output == [3, eos]          # truncated at eos, eos kept
+    assert len(reqs[1].output) == 4            # its own max_new
+    assert all(r.done for r in reqs)
+    # req 1 needed 3 decode steps after prefill; the loop must then stop
+    # instead of running to max(max_new) - 1 = 9 steps.
+    assert len(calls) == 3, calls
+    assert stats["decode_steps"] == 3
+    assert stats["generated"] == 2 + 4
+    assert stats["tokens_per_s"] >= 0.0
+
+
+def test_serve_all_eos_skips_decode():
+    """Every request hitting eos at prefill means zero decode steps."""
+    eos = 7
+    srv, calls = _stub_server(eos, [[eos, 1, 1], [eos, 2, 2]])
+    reqs = [Request(0, np.array([2], np.int32), max_new=8),
+            Request(1, np.array([2], np.int32), max_new=8)]
+    srv.serve_batch(reqs)
+    assert calls == []
+    assert reqs[0].output == [eos] and reqs[1].output == [eos]
+
+
+def test_serve_eos_disabled_runs_to_max_new():
+    srv, calls = _stub_server(None, [[7, 7, 7], [7, 7, 7]])
+    reqs = [Request(0, np.array([2], np.int32), max_new=5),
+            Request(1, np.array([2], np.int32), max_new=5)]
+    stats = srv.serve_batch(reqs)
+    assert len(calls) == 4                     # max_new - 1, no early exit
+    assert all(len(r.output) == 5 for r in reqs)
+    assert stats["generated"] == 10
 
 
 @pytest.mark.slow

@@ -1,0 +1,164 @@
+"""Docs health check: internal links resolve, quoted commands still exist.
+
+Docs rot in two ways this script catches mechanically (CI ``docs`` job,
+``make docs-check``):
+
+1. **Broken internal links** — every relative ``[text](target)`` in
+   README.md and docs/*.md must point at an existing file, and every
+   ``#anchor`` (same-file or cross-file) must match a real heading's
+   GitHub slug.  External (``http(s)://``, ``mailto:``) links are not
+   fetched — this check must pass offline.
+2. **Stale command lines** — every ``python -m some.module`` and
+   ``python path/to/script.py`` invocation quoted in the docs must at
+   least parse ``--help`` with exit status 0 (run with ``PYTHONPATH=src``
+   and ``JAX_PLATFORMS=cpu``, like CI).  A renamed module or deleted
+   entry point fails here instead of in a reader's shell.
+
+Usage:  python tools/check_docs.py [--skip-commands]
+Exit 0 when everything resolves, 1 with a per-finding report otherwise.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+# [text](target) — excluding images' src set is fine: same syntax, same check.
+_LINK_RE = re.compile(r"\[[^\]^\[]*\]\(([^)\s]+)\)")
+_HEADING_RE = re.compile(r"^(#{1,6})\s+(.*)$")
+_PY_MODULE_RE = re.compile(r"python[3]?\s+-m\s+([A-Za-z_][\w.]*)")
+_PY_SCRIPT_RE = re.compile(r"python[3]?\s+((?:[\w.-]+/)*[\w.-]+\.py)")
+
+
+def doc_files() -> list:
+    files = [REPO / "README.md"]
+    files += sorted((REPO / "docs").glob("*.md"))
+    return [f for f in files if f.exists()]
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug: strip markup, lowercase, spaces -> hyphens."""
+    text = re.sub(r"[`*_]", "", heading.strip())
+    text = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", text)  # linked headings
+    text = text.lower()
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def headings_of(path: Path) -> set:
+    slugs = set()
+    in_code = False
+    for line in path.read_text().splitlines():
+        if line.strip().startswith("```"):
+            in_code = not in_code
+            continue
+        if in_code:
+            continue
+        m = _HEADING_RE.match(line)
+        if m:
+            slugs.add(github_slug(m.group(2)))
+    return slugs
+
+
+def check_links(files: list) -> list:
+    failures = []
+    heading_cache = {}
+
+    def slugs(p: Path) -> set:
+        if p not in heading_cache:
+            heading_cache[p] = headings_of(p)
+        return heading_cache[p]
+
+    for f in files:
+        for m in _LINK_RE.finditer(f.read_text()):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            path_part, _, anchor = target.partition("#")
+            dest = f if not path_part else (f.parent / path_part).resolve()
+            rel = f.relative_to(REPO)
+            if path_part and not dest.exists():
+                failures.append(f"{rel}: broken link -> {target}")
+                continue
+            if anchor and dest.suffix == ".md":
+                if github_slug(anchor) not in slugs(dest):
+                    failures.append(
+                        f"{rel}: anchor #{anchor} not found in "
+                        f"{dest.relative_to(REPO)}"
+                    )
+    return failures
+
+
+def quoted_commands(files: list):
+    modules, scripts = set(), set()
+    for f in files:
+        text = f.read_text()
+        modules.update(m.group(1) for m in _PY_MODULE_RE.finditer(text))
+        scripts.update(m.group(1) for m in _PY_SCRIPT_RE.finditer(text))
+    return sorted(modules), sorted(scripts)
+
+
+def check_commands(files: list) -> list:
+    failures = []
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
+    )
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    modules, scripts = quoted_commands(files)
+    invocations = [(f"python -m {m}", [sys.executable, "-m", m, "--help"])
+                   for m in modules]
+    for s in scripts:
+        if not (REPO / s).exists():
+            failures.append(f"quoted script does not exist: {s}")
+            continue
+        invocations.append(
+            (f"python {s}", [sys.executable, str(REPO / s), "--help"])
+        )
+    for label, argv in invocations:
+        try:
+            proc = subprocess.run(
+                argv, cwd=REPO, env=env, timeout=180,
+                stdout=subprocess.DEVNULL, stderr=subprocess.PIPE,
+            )
+        except subprocess.TimeoutExpired:
+            failures.append(f"`{label} --help` timed out")
+            continue
+        if proc.returncode != 0:
+            tail = proc.stderr.decode(errors="replace").strip().splitlines()
+            failures.append(
+                f"`{label} --help` exited {proc.returncode}"
+                + (f": {tail[-1]}" if tail else "")
+            )
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--skip-commands", action="store_true",
+                    help="only check links (fast, no subprocesses)")
+    args = ap.parse_args()
+    files = doc_files()
+    print(f"checking {len(files)} markdown file(s)")
+    failures = check_links(files)
+    if not args.skip_commands:
+        failures += check_commands(files)
+    for f in failures:
+        print(f"  FAIL {f}")
+    if failures:
+        print(f"docs check: {len(failures)} failure(s)")
+        return 1
+    mods, scripts = quoted_commands(files)
+    print(f"docs check OK ({len(mods)} module + {len(scripts)} script "
+          "invocations verified)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
