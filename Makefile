@@ -3,7 +3,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test test-fast test-slow lint analyze analyze-fast bench bench-smoke bench-kernels cache-smoke bench-slo docs-check bench-baseline ci quickstart
+.PHONY: test test-fast test-slow lint analyze analyze-fast sanitize bench bench-smoke bench-kernels cache-smoke bench-slo docs-check bench-baseline ci quickstart
 
 # Tier-1: the full suite, fail-fast, exactly as the roadmap runs it.
 test:
@@ -23,14 +23,21 @@ lint:
 	@if command -v ruff >/dev/null 2>&1; then ruff check .; \
 	else echo "ruff not installed; skipping lint (CI runs it)"; fi
 
-# Correctness tooling: static invariant lint over the hot paths + the
-# deterministic schedule-explorer suite (docs/ARCHITECTURE.md
-# "Correctness tooling").  `analyze-fast` is the sub-second smoke subset.
+# Correctness tooling: static invariant + lockset lint over the hot paths
+# plus the deterministic schedule-explorer suite, serving twin included
+# (docs/ARCHITECTURE.md "Correctness tooling", docs/ANALYSIS.md).
+# `analyze-fast` is the sub-second smoke subset.
 analyze:
 	$(PY) -m repro.analysis
 
 analyze-fast:
 	$(PY) -m repro.analysis --fast
+
+# Happens-before sanitizer run: the concurrency-heavy suites with kinded
+# sync points feeding the vector-clock RaceTracker; a race observed
+# anywhere fails via the conftest sessionfinish hook.
+sanitize:
+	REPRO_CHECK_INVARIANTS=1 $(PY) -m pytest tests/test_scheduler.py tests/test_serving.py -q
 
 bench:
 	$(PY) benchmarks/run.py
@@ -75,7 +82,7 @@ bench-baseline:
 	$(PY) benchmarks/bench_slo.py --smoke --json benchmarks/baselines/BENCH_slo_ci.json
 
 # Everything .github/workflows/ci.yml gates on, in one local target.
-ci: lint analyze test-fast bench-smoke docs-check bench-slo
+ci: lint analyze sanitize test-fast bench-smoke docs-check bench-slo
 
 quickstart:
 	$(PY) examples/quickstart.py

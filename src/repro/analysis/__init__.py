@@ -1,24 +1,37 @@
 """Correctness tooling for the concurrent protocols: static invariant
-lint + deterministic schedule explorer.
+lint (THR/OPC/KRN + LCK lockset inference), a vector-clock happens-before
+sanitizer, and a deterministic schedule explorer.
 
 Kept import-light on purpose: ``repro.analysis.sync`` is imported by the
 hot paths (``core/work_stealing.py``, ``runtime/scheduler.py``,
-``kernels/lookback_scan.py``) at module load, so this package must never
-eagerly import them back (or jax).  Pull the engines explicitly::
+``serving/frontend.py``, ``kernels/lookback_scan.py``) at module load, so
+this package must never eagerly import them back (or jax).  Pull the
+engines explicitly::
 
     from repro.analysis.lint import run_lint
+    from repro.analysis.lockset import lockset_findings
+    from repro.analysis.race import RaceTracker
     from repro.analysis.schedule import explore, standard_suite
     from repro.analysis.invariants import InvariantViolation
 
-or run both from the CLI: ``python -m repro.analysis`` (``make analyze``).
+or run everything from the CLI: ``python -m repro.analysis``
+(``make analyze``).
 """
 
 from .invariants import InvariantViolation
-from .sync import invariants_enabled, set_checking, sync_point
+from .sync import (
+    get_race_tracker,
+    invariants_enabled,
+    reset_race_tracker,
+    set_checking,
+    sync_point,
+)
 
 __all__ = [
     "InvariantViolation",
+    "get_race_tracker",
     "invariants_enabled",
+    "reset_race_tracker",
     "set_checking",
     "sync_point",
 ]

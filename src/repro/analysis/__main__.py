@@ -2,10 +2,12 @@
 
 Subcommands (default ``all``):
 
-* ``lint``    — run the static invariant lint over the configured tree.
+* ``lint``    — run the static invariant lint over the configured tree
+  (THR/OPC/KRN plus the LCK lockset-inference pass over
+  ``lockset_modules``).
 * ``explore`` — run the deterministic schedule-explorer suite (exhaustive
-  small configs + seeded sampled large ones) plus the invariant-wrapped
-  simulator-twin sweep.
+  small configs + seeded sampled large ones, including the serving
+  front-end twin) plus the invariant-wrapped simulator-twin sweep.
 * ``all``     — both engines; exit status is non-zero on any finding.
 
 ``--fast`` switches the explorer to its sub-second smoke subset (used by
@@ -61,7 +63,8 @@ def _run_explore(fast: bool) -> int:
 def main(argv=None) -> int:
     parser = argparse.ArgumentParser(
         prog="python -m repro.analysis",
-        description="static invariant lint + deterministic schedule explorer",
+        description="static invariant + lockset lint, deterministic "
+                    "schedule explorer (stealing/lookback/serving twins)",
     )
     parser.add_argument(
         "command", nargs="?", default="all", choices=("lint", "explore", "all")

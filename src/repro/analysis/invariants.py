@@ -30,6 +30,11 @@ __all__ = [
     "check_lookback_step",
     "check_board_published",
     "check_phase_order",
+    "check_admission_bound",
+    "check_dispatch_lane",
+    "check_session_exclusive",
+    "check_session_fifo",
+    "check_all_dispatched",
 ]
 
 
@@ -243,3 +248,64 @@ def record_events(log: List[Tuple[str, int]], kind: str, seg: int) -> None:
     """Append one phase event (tiny helper so models and hooks share the
     event vocabulary used by :func:`check_phase_order`)."""
     log.append((kind, seg))
+
+
+# ---------------------------------------------------------------------------
+# Serving front-end protocol (serving/frontend.py)
+# ---------------------------------------------------------------------------
+
+
+def check_admission_bound(tenant: str, queued: int, depth: int) -> None:
+    """Reject-never-blocks: a tenant's queue never exceeds its admission
+    depth — an over-full queue means a submit slipped past the full-check
+    (the lock around check+append removed)."""
+    if queued > depth:
+        raise InvariantViolation(
+            "admission-bound",
+            f"tenant {tenant!r} holds {queued} queued requests, depth is "
+            f"{depth} — admission raced past the full-check",
+        )
+
+
+def check_dispatch_lane(chosen_priority: int, top_priority: int) -> None:
+    """Priority-lane preemption at dispatch boundaries: the dispatcher
+    never picks from a lane below the highest non-empty one."""
+    if chosen_priority < top_priority:
+        raise InvariantViolation(
+            "lane-priority",
+            f"dispatched a priority-{chosen_priority} request while a "
+            f"priority-{top_priority} lane had runnable work",
+        )
+
+
+def check_session_exclusive(session: str, in_flight: Iterable[str]) -> None:
+    """Busy-set discipline: at most one request per session executes at a
+    time (dispatching into a busy session breaks per-session ordering)."""
+    if session in set(in_flight):
+        raise InvariantViolation(
+            "session-exclusive",
+            f"session {session!r} dispatched while an earlier request for "
+            "it was still executing",
+        )
+
+
+def check_session_fifo(session: str, seq: int, last_seq: Optional[int]) -> None:
+    """Per-session order preserved: a session's requests are dispatched in
+    strictly increasing submission order."""
+    if last_seq is not None and seq <= last_seq:
+        raise InvariantViolation(
+            "session-fifo",
+            f"session {session!r} dispatched seq {seq} after seq {last_seq}",
+        )
+
+
+def check_all_dispatched(admitted: int, completed: int) -> None:
+    """No lost wakeup: once submitters stop and dispatchers drain, every
+    admitted request has completed — a shortfall means a notify was missed
+    and a queued request was stranded."""
+    if completed != admitted:
+        raise InvariantViolation(
+            "lost-wakeup",
+            f"{completed}/{admitted} admitted requests completed — queued "
+            "work stranded after the dispatchers drained",
+        )

@@ -41,6 +41,12 @@ backend silently assumes (Copik's thesis derives the operator requirements;
       ``time``/``random``/``np.random`` …) inside a kernel body.
     * KRN002 — no ``global``/``nonlocal`` statements inside a kernel body.
 
+**Lockset inference** (``LCK``) — whole-module guard inference over the
+classes in ``lockset_modules`` (generalizes THR002 beyond ``_Gap``); see
+``analysis/lockset.py`` for the rules (LCK001 unlocked access, LCK002
+inconsistent acquisition order, LCK003 unlocked mutation from
+``spawn_daemon`` bodies).
+
 Suppression: a trailing ``# analysis: allow[RULE]`` comment on the flagged
 line (use sparingly; every allow should carry a reason).
 """
@@ -87,6 +93,20 @@ class LintConfig:
     #: pass only — mock operators in tests/benchmarks must not drift from
     #: the adapter signatures the engine consumes.
     contract_extra_paths: Tuple[str, ...] = ("tests", "benchmarks")
+    #: Modules (paths relative to ``root``) under lockset inference (LCK) —
+    #: the classes whose lock discipline the Eraser-style pass infers and
+    #: enforces.
+    lockset_modules: Tuple[str, ...] = (
+        "core/work_stealing.py",
+        "core/engine/telemetry.py",
+        "runtime/scheduler.py",
+        "runtime/compile_cache.py",
+        "runtime/elastic.py",
+        "runtime/fault.py",
+        "runtime/straggler.py",
+        "serving/frontend.py",
+        "serving/policies.py",
+    )
 
 
 def load_config(start: Optional[str] = None) -> Tuple[LintConfig, str]:
@@ -501,8 +521,9 @@ def lint_source(
     rel: str,
     cfg: Optional[LintConfig] = None,
     *,
-    passes: Sequence[str] = ("threads", "contract", "kernels"),
+    passes: Sequence[str] = ("threads", "contract", "kernels", "lockset"),
     in_kernel_scope: Optional[bool] = None,
+    in_lockset_scope: Optional[bool] = None,
 ) -> List[Finding]:
     """Lint one module's source (``rel`` is its path relative to the scope
     root — rule applicability is path-based).  Used by the file driver and
@@ -526,6 +547,14 @@ def lint_source(
             )
         if kernel_scope:
             findings += _kernel_purity(tree, rel)
+    if "lockset" in passes:
+        lockset_scope = in_lockset_scope
+        if lockset_scope is None:
+            lockset_scope = rel in cfg.lockset_modules
+        if lockset_scope:
+            from .lockset import lockset_findings  # local: lockset imports us
+
+            findings += lockset_findings(tree, rel)
     allowed = _allowed_lines(source)
     findings = [
         f for f in findings

@@ -29,12 +29,23 @@ the same prefixes; and ``tests/test_analysis.py`` asserts the model's
 sync-point labels are hit by the real executors under
 ``REPRO_CHECK_INVARIANTS=1``.
 
+The serving front end (``serving/frontend.py``) gets its own twin:
+:class:`FrontendModel` models admission against bounded per-tenant queues
+(reject-never-blocks), dispatcher claims with priority-lane preemption at
+claim boundaries, and the busy-set per-session FIFO, checked against the
+serving invariants (``admission-bound``, ``lane-priority``,
+``session-exclusive``, ``session-fifo``, ``no-double-claim``,
+``lost-wakeup``).
+
 Mutation seeding (``bugs=``) re-introduces known protocol races —
 ``drop_claim_cas`` (gap take's emptiness check and claim-counter update
 split, i.e. the lock removed), ``early_phase3``, ``unordered_publish``
-(lookback reads without waiting for a published predecessor) and
-``ignore_prefix_stop`` — so tests can prove the explorer actually detects
-each class of bug within a bounded schedule budget.
+(lookback reads without waiting for a published predecessor),
+``ignore_prefix_stop``, and for the serving twin ``dispatch_while_full``
+(the admission full-check unguarded), ``drop_busy_set``,
+``lane_inversion`` and ``double_dispatch`` (queue pop deferred past the
+claim boundary) plus ``lost_wakeup`` — so tests can prove the explorer
+actually detects each class of bug within a bounded schedule budget.
 """
 
 from __future__ import annotations
@@ -45,10 +56,15 @@ from typing import Callable, Dict, FrozenSet, Iterable, List, Optional, Sequence
 
 from .invariants import (
     InvariantViolation,
+    check_admission_bound,
+    check_all_dispatched,
     check_board_published,
+    check_dispatch_lane,
     check_interval_partition,
     check_lookback_step,
     check_phase_order,
+    check_session_exclusive,
+    check_session_fifo,
     check_unique_claims,
     claim_once,
     record_events,
@@ -61,12 +77,14 @@ __all__ = [
     "ExploreResult",
     "Violation",
     "explore",
+    "frontend_model",
     "gap_model",
     "lookback_model",
     "phase_model",
     "verify_simulator_twin",
     "standard_suite",
     "SUITE_LABELS",
+    "SERVING_LABELS",
 ]
 
 
@@ -606,6 +624,188 @@ def lookback_model(
 
 
 # ---------------------------------------------------------------------------
+# protocol twin: serving front end (admission / dispatch / busy set)
+# ---------------------------------------------------------------------------
+
+
+class _FeTenant:
+    __slots__ = ("name", "priority", "depth", "requests", "queue", "rejected")
+
+    def __init__(self, name, priority, depth, requests):
+        self.name = name
+        self.priority = priority
+        self.depth = depth
+        self.requests = list(requests)
+        self.queue: List[Tuple[int, Optional[str]]] = []
+        self.rejected = 0
+
+
+class FrontendModel:
+    """Cooperative twin of ``RegistrationFrontend``'s serving protocol.
+
+    Submitter tasks (one per tenant) submit that tenant's requests in
+    order; the admission check + append is one atomic step, mirroring the
+    real ``_submit`` under ``_cond`` (``serve.submit``; a full queue
+    rejects without blocking, ``serve.reject``).  Dispatcher tasks loop:
+    wait until some head is runnable, pick from the *highest* non-empty
+    priority lane (lowest submission seq within the lane — the fifo
+    policy), pop and mark the session busy atomically (``serve.pick`` is
+    the claim boundary), execute (the window between ``serve.pick`` and
+    ``serve.complete``), then complete — clearing the busy set and
+    notifying.  A head whose session is busy is not runnable: a tenant's
+    queue is strictly FIFO behind it.
+
+    Ground-truth checks, active in every schedule: the admission bound
+    (queue never exceeds depth), ``claim_once`` on every dispatched seq
+    (no ticket dispatched twice), lane priority at every pick, per-session
+    dispatch order, session exclusivity during execution, and at finalize
+    every admitted request completed (no lost wakeup).
+
+    Bugs: ``dispatch_while_full`` drops the admission full-check (the lock
+    around check+append removed); ``drop_busy_set`` never marks sessions
+    busy; ``lane_inversion`` picks the globally oldest head ignoring
+    lanes; ``double_dispatch`` defers the queue pop past the claim
+    boundary (two dispatchers can claim one ticket); ``lost_wakeup``
+    makes dispatchers exit once submitters finish, ignoring queued work.
+    """
+
+    def __init__(
+        self,
+        tenants: Sequence[Tuple[str, int, int, Sequence[Optional[str]]]],
+        *,
+        dispatchers: int = 1,
+        bugs: FrozenSet[str] = frozenset(),
+    ):
+        self.tenants = [_FeTenant(*spec) for spec in tenants]
+        self.n_dispatchers = dispatchers
+        self.bug_full = "dispatch_while_full" in bugs
+        self.bug_busy = "drop_busy_set" in bugs
+        self.bug_lane = "lane_inversion" in bugs
+        self.bug_double = "double_dispatch" in bugs
+        self.bug_lost = "lost_wakeup" in bugs
+        self._seq = 0
+        self.admitted = 0
+        self.rejected = 0
+        self.completed = 0
+        self.in_flight = 0
+        self.busy: set = set()
+        self.exec_sessions: set = set()
+        self.dispatch_claims: Dict[int, object] = {}
+        self.last_seq: Dict[str, int] = {}
+        self._submitters_done = 0
+
+    def tasks(self):
+        out = [(f"sub:{t.name}", self._submitter(t)) for t in self.tenants]
+        out += [(f"disp{d}", self._dispatcher(d))
+                for d in range(self.n_dispatchers)]
+        return out
+
+    # ------------------------------------------------------------- helpers
+
+    def _submit_done(self) -> bool:
+        return self._submitters_done == len(self.tenants)
+
+    def _pending(self) -> bool:
+        return (
+            not self._submit_done()
+            or any(t.queue for t in self.tenants)
+            or self.in_flight > 0
+        )
+
+    def _finished(self) -> bool:
+        if self.bug_lost:
+            # The seeded bug: the exit condition forgets queued work — the
+            # dispatcher that consumed the last notify leaves requests
+            # stranded.
+            return self._submit_done()
+        return not self._pending()
+
+    def _runnable(self) -> List[Tuple[_FeTenant, int, Optional[str]]]:
+        views = []
+        for t in self.tenants:
+            if not t.queue:
+                continue
+            seq, session = t.queue[0]
+            if session is not None and session in self.busy:
+                continue
+            views.append((t, seq, session))
+        return views
+
+    # --------------------------------------------------------------- tasks
+
+    def _submitter(self, t: _FeTenant):
+        for session in t.requests:
+            yield "serve.submit"
+            # Admission is one atomic step (the real _submit holds _cond
+            # across check + append) — unless the full-check bug is seeded.
+            if not self.bug_full and len(t.queue) >= t.depth:
+                t.rejected += 1
+                self.rejected += 1
+                yield "serve.reject"
+                continue
+            t.queue.append((self._seq, session))
+            self._seq += 1
+            self.admitted += 1
+            check_admission_bound(t.name, len(t.queue), t.depth)
+        self._submitters_done += 1
+
+    def _dispatcher(self, d: int):
+        while True:
+            yield ("wait", lambda: bool(self._runnable()) or self._finished())
+            if self._finished():
+                return
+            views = self._runnable()
+            if not views:
+                continue
+            top = max(t.priority for t, _, _ in views)
+            if self.bug_lane:
+                # The seeded bug: the lane filter removed — the policy sees
+                # every runnable head and fifo picks the globally oldest.
+                t, seq, session = min(views, key=lambda v: v[1])
+            else:
+                lane = [v for v in views if v[0].priority == top]
+                t, seq, session = min(lane, key=lambda v: v[1])
+            check_dispatch_lane(t.priority, top)
+            claim_once(self.dispatch_claims, seq, f"disp{d}")
+            if session is not None:
+                check_session_fifo(session, seq, self.last_seq.get(session))
+                self.last_seq[session] = seq
+            if not self.bug_double:
+                t.queue.pop(0)
+            if session is not None and not self.bug_busy:
+                self.busy.add(session)
+            self.in_flight += 1
+            yield "serve.pick"
+            # --- execution window (between pick and complete) ---
+            if session is not None:
+                check_session_exclusive(session, self.exec_sessions)
+                self.exec_sessions.add(session)
+            yield "serve.complete"
+            if self.bug_double and t.queue and t.queue[0][0] == seq:
+                t.queue.pop(0)  # the deferred pop the bug moved here
+            if session is not None:
+                self.exec_sessions.discard(session)
+                self.busy.discard(session)
+            self.in_flight -= 1
+            self.completed += 1
+
+    def finalize(self):
+        check_all_dispatched(self.admitted, self.completed)
+
+
+def frontend_model(
+    tenants: Sequence[Tuple[str, int, int, Sequence[Optional[str]]]],
+    *,
+    dispatchers: int = 1,
+    bugs: FrozenSet[str] = frozenset(),
+) -> Callable[[], FrontendModel]:
+    """Model factory.  ``tenants`` entries are ``(name, priority, depth,
+    requests)`` with ``requests`` a sequence of session keys (None =
+    sessionless) submitted in order."""
+    return lambda: FrontendModel(tenants, dispatchers=dispatchers, bugs=bugs)
+
+
+# ---------------------------------------------------------------------------
 # the virtual-time cross-segment twin (deterministic — invariant-wrapped)
 # ---------------------------------------------------------------------------
 
@@ -677,6 +877,16 @@ SUITE_LABELS = (
     "lookback.publish_prefix",
 )
 
+#: Labels the serving twin branches on; anchored separately (the serving
+#: front end is driven by tests/test_analysis.py's manual frontend, not
+#: the scan executors that anchor SUITE_LABELS).
+SERVING_LABELS = (
+    "serve.submit",
+    "serve.reject",
+    "serve.pick",
+    "serve.complete",
+)
+
 
 def standard_suite(fast: bool = False) -> List[Tuple[str, ExploreResult]]:
     """The clean-tree exploration suite run by ``make analyze`` and CI.
@@ -726,5 +936,20 @@ def standard_suite(fast: bool = False) -> List[Tuple[str, ExploreResult]]:
             lookback_model(8, granularity="fine"),
             mode="sample", seed=11, samples=1500,
         )
+
+    # Serving front end: admission + priority lanes with one dispatcher,
+    # then the busy-set session FIFO duel with two dispatchers.
+    run("serve/2t/prio/d1", frontend_model(
+        [("batch", 0, 1, [None, None]), ("inter", 1, 1, [None])],
+    ))
+    run("serve/session/d2", frontend_model(
+        [("scope", 0, 2, ["s1", "s1"])], dispatchers=2,
+    ))
+    if not fast:
+        # Three tasks' full product is out of dfs budget — seeded sampling.
+        run("serve/mixed/d2/sample", frontend_model(
+            [("batch", 0, 1, ["s1", "s1"]), ("inter", 1, 1, [None])],
+            dispatchers=2,
+        ), mode="sample", seed=5, samples=2000)
 
     return entries

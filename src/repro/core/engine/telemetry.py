@@ -64,17 +64,30 @@ class OpTelemetry:
                 else (1 - self.ema_alpha) * self.ema_time + self.ema_alpha * seconds
             )
 
-    def mean(self) -> float:
+    # The readers take the lock too: ``_lock`` is a plain (non-reentrant)
+    # ``threading.Lock``, so the shared arithmetic lives in ``*_locked``
+    # helpers the locked public methods compose without re-acquiring.
+
+    def _mean_locked(self) -> float:
         return self.total_time / self.calls if self.calls else 0.0
+
+    def _imbalance_locked(self) -> float:
+        m = self._mean_locked()
+        return self.max_time / m if m > 0 else 1.0
+
+    def mean(self) -> float:
+        with self._lock:
+            return self._mean_locked()
 
     def estimate(self) -> Optional[float]:
         """Seconds/application for the dispatcher; None before any call."""
-        return self.ema_time
+        with self._lock:
+            return self.ema_time
 
     def imbalance(self) -> float:
         """max/mean per-call cost ratio — the paper's imbalance signal."""
-        m = self.mean()
-        return self.max_time / m if m > 0 else 1.0
+        with self._lock:
+            return self._imbalance_locked()
 
     def reset(self) -> None:
         with self._lock:
@@ -87,16 +100,17 @@ class OpTelemetry:
             self.compile_time = 0.0
 
     def summary(self) -> Dict[str, float]:
-        return {
-            "calls": self.calls,
-            "total_s": self.total_time,
-            "mean_s": self.mean(),
-            "max_s": self.max_time if self.calls else 0.0,
-            "ema_s": self.ema_time if self.ema_time is not None else 0.0,
-            "imbalance": self.imbalance(),
-            "compile_calls": self.compile_calls,
-            "compile_s": self.compile_time,
-        }
+        with self._lock:
+            return {
+                "calls": self.calls,
+                "total_s": self.total_time,
+                "mean_s": self._mean_locked(),
+                "max_s": self.max_time if self.calls else 0.0,
+                "ema_s": self.ema_time if self.ema_time is not None else 0.0,
+                "imbalance": self._imbalance_locked(),
+                "compile_calls": self.compile_calls,
+                "compile_s": self.compile_time,
+            }
 
 
 _registry: Dict[str, OpTelemetry] = {}

@@ -87,7 +87,10 @@ class _Gap:
     border: Optional[int] = None
 
     def size(self) -> int:
-        return max(0, self.hi - self.lo)
+        # Racy probe by design: callers only use it to pick a direction, and
+        # take_left/take_right re-validate lo < hi under the lock before
+        # claiming, so a stale read can never over-claim.
+        return max(0, self.hi - self.lo)  # analysis: allow[LCK001]
 
     def take_left(self) -> Optional[int]:
         """Left thread extends right: claim ``lo``."""

@@ -132,6 +132,9 @@ class PlanStore:
     def __init__(self, directory: str):
         self.directory = os.path.join(directory, "plans")
         os.makedirs(self.directory, exist_ok=True)
+        # The hit counters are read by cache stats while worker threads
+        # load/store plans concurrently; `n += 1` is not atomic.
+        self._lock = threading.Lock()
         self.loads = 0
         self.stores = 0
 
@@ -146,7 +149,8 @@ class PlanStore:
         except (OSError, pickle.UnpicklingError, EOFError, AttributeError,
                 ImportError, IndexError):
             return None
-        self.loads += 1
+        with self._lock:
+            self.loads += 1
         return plan
 
     def store(self, key: Any, plan) -> bool:
@@ -165,7 +169,8 @@ class PlanStore:
             except OSError:
                 pass
             return False
-        self.stores += 1
+        with self._lock:
+            self.stores += 1
         return True
 
 

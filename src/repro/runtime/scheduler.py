@@ -141,6 +141,11 @@ class WorkerPool:
         # Lifetime counters (benchmarks / introspection).
         self.tasks_completed = 0
         self.groups_submitted = 0
+        # Happens-before sanitizer names (precomputed: sync_point argument
+        # evaluation must stay cheap on the claim hot path when checking
+        # is off).
+        self._sp_state = f"pool{id(self)}.groups"
+        self._sp_lock = f"pool{id(self)}.cond"
 
     # ------------------------------------------------------------- workers
 
@@ -172,12 +177,16 @@ class WorkerPool:
         if not self._groups:
             return None
         top = max(g.priority for g in self._groups)
+        if top > 0:
+            sync_point("pool.lane.priority", "read",
+                       var=self._sp_state, lock=self._sp_lock)
         lane = [g for g in self._groups if g.priority == top]
         g = lane[self._rr % len(lane)]
         self._rr += 1
         idx = g.next
         g.next += 1
-        sync_point("pool.claim")
+        sync_point("pool.claim", "write",
+                   var=self._sp_state, lock=self._sp_lock)
         return g, idx
 
     def _complete_locked(self, group: _TaskGroup, idx: int, result, err) -> None:
@@ -259,7 +268,8 @@ class WorkerPool:
                 if group.unclaimed() > 0:
                     idx = group.next
                     group.next += 1
-                    sync_point("pool.claim")
+                    sync_point("pool.claim", "write",
+                               var=self._sp_state, lock=self._sp_lock)
                     # Helper-claimed tasks are demand like any other:
                     # occupancy() must see them or a saturated pool of
                     # helping callers reads as idle.
@@ -297,7 +307,8 @@ class WorkerPool:
     @property
     def num_workers(self) -> int:
         """Workers spawned so far (grows lazily toward ``max_workers``)."""
-        return len(self._threads)
+        with self._cond:
+            return len(self._threads)
 
     def queued(self) -> int:
         """Tasks admitted but not yet claimed by any thread."""
@@ -311,10 +322,10 @@ class WorkerPool:
         spoken for and new tasks will queue.  The dispatcher reads this
         (``engine/cost.py:POOL_BUSY_OCCUPANCY``).
         """
-        if self.max_workers == 0:
-            return float("inf") if self.queued() or self._claimed else 0.0
         with self._cond:
             demand = self._claimed + sum(g.unclaimed() for g in self._groups)
+        if self.max_workers == 0:
+            return float("inf") if demand else 0.0
         return demand / self.max_workers
 
     def tenants(self) -> int:

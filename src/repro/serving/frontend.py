@@ -50,6 +50,7 @@ import time
 from collections import deque
 from typing import Any, Callable, Deque, Dict, List, Optional
 
+from repro.analysis.sync import sync_point
 from repro.core.engine.telemetry import get_telemetry, release_telemetry
 from repro.runtime.scheduler import at_priority, get_default_pool, spawn_daemon
 from repro.serving.policies import QueueView, get_policy
@@ -264,6 +265,11 @@ class RegistrationFrontend:
         self._sessions: Dict[str, Any] = {}
         self._busy: set = set()                  # session keys mid-execution
         self._stop = False
+        # Happens-before sanitizer names, precomputed so the sync_point
+        # call sites stay cheap when checking is off (constant attribute
+        # loads, no per-call string building).
+        self._sp_state = f"frontend{self._id}.queues"
+        self._sp_lock = f"frontend{self._id}.cond"
         self._dispatchers = []
         if auto_dispatch:
             for i in range(self.cfg.dispatch_workers):
@@ -381,22 +387,28 @@ class RegistrationFrontend:
 
     # ------------------------------------------------------------ admission
 
+    # `_cond`'s default lock is an RLock, so these lookups stay safe to
+    # call from inside `_submit`'s locked section and from bare call sites
+    # alike — re-entry just recurses the lock.
+
     def _tenant_of(self, name: str) -> _Tenant:
-        try:
-            return self._tenants[name]
-        except KeyError:
-            raise ValueError(
-                f"unknown tenant {name!r}; add_tenant() first "
-                f"(known: {sorted(self._tenants)})"
-            ) from None
+        with self._cond:
+            try:
+                return self._tenants[name]
+            except KeyError:
+                raise ValueError(
+                    f"unknown tenant {name!r}; add_tenant() first "
+                    f"(known: {sorted(self._tenants)})"
+                ) from None
 
     def _session_of(self, session_id: str):
-        try:
-            return self._sessions[session_id]
-        except KeyError:
-            raise ValueError(
-                f"unknown session {session_id!r}; open_series() first"
-            ) from None
+        with self._cond:
+            try:
+                return self._sessions[session_id]
+            except KeyError:
+                raise ValueError(
+                    f"unknown session {session_id!r}; open_series() first"
+                ) from None
 
     def _submit(self, tenant: str, kind: str, fn, *, items: int,
                 session_key: Optional[str]) -> Ticket:
@@ -406,12 +418,16 @@ class RegistrationFrontend:
             t = self._tenant_of(tenant)
             if len(t.queue) >= t.depth:
                 t.rejected += 1
+                sync_point("serve.reject", "read",
+                           var=self._sp_state, lock=self._sp_lock)
                 raise AdmissionError(tenant, t.depth)
             ticket = Ticket(tenant, kind, next(self._seq), self._clock(),
                             self._turns)
             t.queue.append(_Request(tenant, kind, fn, items, session_key,
                                     ticket))
             t.admitted += 1
+            sync_point("serve.submit", "write",
+                       var=self._sp_state, lock=self._sp_lock)
             self._cond.notify_all()
         return ticket
 
@@ -454,10 +470,13 @@ class RegistrationFrontend:
         req.ticket.dispatch_turn = self._turns
         self._turns += 1
         req.ticket.t_dispatch = self._clock()
+        sync_point("serve.pick", "write",
+                   var=self._sp_state, lock=self._sp_lock)
         return req
 
     def _execute(self, req: _Request) -> None:
-        t = self._tenants[req.tenant]
+        with self._cond:
+            t = self._tenants[req.tenant]
         value = None
         error: Optional[BaseException] = None
         try:
@@ -479,6 +498,8 @@ class RegistrationFrontend:
                 t.telemetry.record(service / max(req.items, 1))
             else:
                 t.failed += 1
+            sync_point("serve.complete", "write",
+                       var=self._sp_state, lock=self._sp_lock)
             self._cond.notify_all()
         req.ticket._complete(value, error, t_done)
 
@@ -562,7 +583,8 @@ class RegistrationFrontend:
                 return
             self._stop = True
             dropped: List[_Request] = []
-            for t in self._tenants.values():
+            tenants = list(self._tenants.values())
+            for t in tenants:
                 dropped.extend(t.queue)
                 t.queue.clear()
             sessions = list(self._sessions.values())
@@ -578,7 +600,7 @@ class RegistrationFrontend:
             d.join(timeout)
         for session in sessions:
             session.close()
-        for t in self._tenants.values():
+        for t in tenants:
             release_telemetry(t.name, session=f"serving{self._id}")
 
     def __enter__(self) -> "RegistrationFrontend":

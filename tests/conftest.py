@@ -20,6 +20,34 @@ def pytest_configure(config):
     )
 
 
+def pytest_sessionfinish(session, exitstatus):
+    """Surface happens-before sanitizer reports as a run failure.
+
+    Under ``REPRO_CHECK_INVARIANTS=1`` the kinded sync points feed the
+    process-wide vector-clock RaceTracker; a race observed anywhere in the
+    run (even inside an otherwise-passing test) must fail CI's sanitizer
+    job.  A no-op in normal runs: the gate is off and the tracker is never
+    created.
+    """
+    try:
+        from repro.analysis import sync as _sync
+    except Exception:
+        return
+    if not _sync.invariants_enabled() or _sync._tracker is None:
+        return
+    races = _sync._tracker.races()
+    if races:
+        rep = session.config.pluginmanager.get_plugin("terminalreporter")
+        lines = [f"  {r}" for r in races]
+        msg = "happens-before sanitizer reported races:\n" + "\n".join(lines)
+        if rep is not None:
+            rep.write_sep("=", "RACE SANITIZER", red=True)
+            rep.write_line(msg)
+        else:
+            print(msg)
+        session.exitstatus = 1
+
+
 def run_in_subprocess(code: str, *, devices: int = 8, timeout: int = 600):
     """Run a python snippet with N virtual host devices; returns stdout."""
     env = dict(os.environ)

@@ -1,8 +1,13 @@
-"""Correctness tooling (``repro.analysis``): static lint rules, the shared
-invariant module, and the deterministic schedule explorer — including the
-mutation-seeding proof that the explorer actually detects each class of
-protocol bug, and the anchoring tests that tie the explorer's sync-point
-labels to the real executors."""
+"""Correctness tooling (``repro.analysis``): static lint rules (including
+the LCK lockset-inference pass), the shared invariant module, the
+vector-clock happens-before sanitizer, and the deterministic schedule
+explorer — including the mutation-seeding proof that the explorer actually
+detects each class of protocol bug, and the anchoring tests that tie the
+explorer's sync-point labels to the real executors."""
+
+import dataclasses
+import threading
+import time
 
 import numpy as np
 import pytest
@@ -10,18 +15,26 @@ import pytest
 from repro.analysis import invariants as inv
 from repro.analysis.invariants import (
     InvariantViolation,
+    check_admission_bound,
+    check_all_dispatched,
     check_board_published,
+    check_dispatch_lane,
     check_group_settled,
     check_interval_partition,
     check_lookback_step,
     check_phase_order,
+    check_session_exclusive,
+    check_session_fifo,
     check_unique_claims,
     claim_once,
 )
 from repro.analysis.lint import LintConfig, lint_source, load_config, run_lint
+from repro.analysis.race import RaceTracker
 from repro.analysis.schedule import (
+    SERVING_LABELS,
     SUITE_LABELS,
     explore,
+    frontend_model,
     gap_model,
     lookback_model,
     phase_model,
@@ -29,10 +42,13 @@ from repro.analysis.schedule import (
     verify_simulator_twin,
 )
 from repro.analysis.sync import (
+    get_race_tracker,
     invariants_enabled,
     observed_labels,
     reset_observed,
+    reset_race_tracker,
     set_checking,
+    sync_point,
 )
 
 
@@ -225,6 +241,195 @@ def test_kernel_rules_scoped_to_kernel_paths():
 
 
 # ======================================================================
+# static lint: lockset inference (LCK)
+# ======================================================================
+
+
+COUNTER_SNIPPET = (
+    "import threading\n"
+    "class Pool:\n"
+    "    def __init__(self):\n"
+    "        self._lock = threading.Lock()\n"
+    "        self.count = 0\n"
+    "    def bump(self):\n"
+    "        with self._lock:\n"
+    "            self.count += 1\n"
+    "    def peek(self):\n"
+    "        return self.count\n"
+)
+
+
+def test_lck001_read_outside_inferred_guard():
+    findings = lint_source(COUNTER_SNIPPET, "x.py", in_lockset_scope=True)
+    assert _rules(findings) == ["LCK001"]
+    # The finding names the attribute, the offending method and the guard.
+    msg = findings[0].message
+    assert "Pool.count" in msg and "peek()" in msg and "_lock" in msg
+
+
+def test_lck001_all_accesses_guarded_pass():
+    src = COUNTER_SNIPPET.replace(
+        "    def peek(self):\n        return self.count\n",
+        "    def peek(self):\n"
+        "        with self._lock:\n"
+        "            return self.count\n",
+    )
+    assert lint_source(src, "x.py", in_lockset_scope=True) == []
+
+
+def test_lck001_locked_suffix_convention_holds_all_locks():
+    # `*_locked` helpers are called with the class locks already held —
+    # the convention the scheduler/frontend hot paths rely on.
+    src = (
+        "import threading\n"
+        "class Pool:\n"
+        "    def __init__(self):\n"
+        "        self._lock = threading.Lock()\n"
+        "        self.count = 0\n"
+        "    def bump(self):\n"
+        "        with self._lock:\n"
+        "            self.count += 1\n"
+        "    def _peek_locked(self):\n"
+        "        return self.count\n"
+    )
+    assert lint_source(src, "x.py", in_lockset_scope=True) == []
+
+
+def test_lck001_container_mutator_counts_as_write():
+    src = (
+        "import threading\n"
+        "class Q:\n"
+        "    def __init__(self):\n"
+        "        self._lock = threading.Lock()\n"
+        "        self.items = []\n"
+        "    def put(self, v):\n"
+        "        with self._lock:\n"
+        "            self.items.append(v)\n"
+        "    def drain(self):\n"
+        "        return self.items.pop()\n"
+    )
+    findings = lint_source(src, "x.py", in_lockset_scope=True)
+    assert _rules(findings) == ["LCK001"]
+    assert "Q.items" in findings[0].message
+
+
+def test_lck001_undisciplined_attr_is_skipped():
+    # No locked mutation anywhere -> no inferred discipline to enforce
+    # (flagging would drown real findings in single-threaded state noise).
+    src = (
+        "import threading\n"
+        "class C:\n"
+        "    def __init__(self):\n"
+        "        self._lock = threading.Lock()\n"
+        "        self.n = 0\n"
+        "    def bump(self):\n"
+        "        self.n += 1\n"
+        "    def peek(self):\n"
+        "        return self.n\n"
+    )
+    assert lint_source(src, "x.py", in_lockset_scope=True) == []
+
+
+def test_lck001_allow_comment_suppresses():
+    src = COUNTER_SNIPPET.replace(
+        "        return self.count\n",
+        "        return self.count  # analysis: allow[LCK001] racy probe\n",
+    )
+    assert lint_source(src, "x.py", in_lockset_scope=True) == []
+
+
+def test_lck001_scoped_to_lockset_modules():
+    # Out of scope by default for an arbitrary path...
+    assert lint_source(COUNTER_SNIPPET, "viz/plots.py") == []
+    # ...in scope for a configured hot module without forcing the flag.
+    assert _rules(lint_source(COUNTER_SNIPPET, "serving/frontend.py")) == [
+        "LCK001"
+    ]
+
+
+def test_lck002_inconsistent_acquisition_order():
+    src = (
+        "import threading\n"
+        "class C:\n"
+        "    def __init__(self):\n"
+        "        self._lock = threading.Lock()\n"
+        "        self._cond = threading.Lock()\n"
+        "    def f(self):\n"
+        "        with self._lock:\n"
+        "            with self._cond:\n"
+        "                pass\n"
+        "    def g(self):\n"
+        "        with self._cond:\n"
+        "            with self._lock:\n"
+        "                pass\n"
+    )
+    findings = lint_source(src, "x.py", in_lockset_scope=True)
+    assert _rules(findings) == ["LCK002", "LCK002"]  # one per cycle edge
+
+
+def test_lck002_consistent_order_passes():
+    src = (
+        "import threading\n"
+        "class C:\n"
+        "    def __init__(self):\n"
+        "        self._lock = threading.Lock()\n"
+        "        self._cond = threading.Lock()\n"
+        "    def f(self):\n"
+        "        with self._lock:\n"
+        "            with self._cond:\n"
+        "                pass\n"
+        "    def g(self):\n"
+        "        with self._lock:\n"
+        "            with self._cond:\n"
+        "                pass\n"
+    )
+    assert lint_source(src, "x.py", in_lockset_scope=True) == []
+
+
+def test_lck003_daemon_body_mutates_unlocked():
+    src = (
+        "import threading\n"
+        "from repro.runtime.scheduler import spawn_daemon\n"
+        "class Svc:\n"
+        "    def __init__(self):\n"
+        "        self._lock = threading.Lock()\n"
+        "        self.beats = 0\n"
+        "    def start(self):\n"
+        "        spawn_daemon(self._loop, name='svc')\n"
+        "    def _loop(self):\n"
+        "        self.beats += 1\n"
+    )
+    findings = lint_source(src, "x.py", in_lockset_scope=True)
+    assert _rules(findings) == ["LCK003"]
+    assert "beats" in findings[0].message
+
+
+def test_lck003_daemon_body_locked_passes():
+    src = (
+        "import threading\n"
+        "from repro.runtime.scheduler import spawn_daemon\n"
+        "class Svc:\n"
+        "    def __init__(self):\n"
+        "        self._lock = threading.Lock()\n"
+        "        self.beats = 0\n"
+        "    def start(self):\n"
+        "        spawn_daemon(self._loop, name='svc')\n"
+        "    def _loop(self):\n"
+        "        with self._lock:\n"
+        "            self.beats += 1\n"
+    )
+    assert lint_source(src, "x.py", in_lockset_scope=True) == []
+
+
+def test_module_locksets_debug_helper():
+    from repro.analysis.lockset import module_locksets
+
+    sets = module_locksets(COUNTER_SNIPPET)
+    assert "Pool" in sets
+    assert any("_lock" in g for g in sets["Pool"].get("count", ()))
+
+
+# ======================================================================
 # lint driver: config + the clean-tree gate
 # ======================================================================
 
@@ -313,6 +518,35 @@ def test_phase_order_invariants():
         check_phase_order([("p1_done", 0), ("p3_start", 0)])
 
 
+def test_serving_admission_invariant():
+    check_admission_bound("batch", 2, 2)
+    with pytest.raises(InvariantViolation, match="admission-bound"):
+        check_admission_bound("batch", 3, 2)
+
+
+def test_serving_lane_invariant():
+    check_dispatch_lane(1, 1)
+    check_dispatch_lane(2, 1)  # above the top lane can't happen, but is safe
+    with pytest.raises(InvariantViolation, match="lane-priority"):
+        check_dispatch_lane(0, 1)
+
+
+def test_serving_session_invariants():
+    check_session_exclusive("s1", {"s2"})
+    with pytest.raises(InvariantViolation, match="session-exclusive"):
+        check_session_exclusive("s1", {"s1", "s2"})
+    check_session_fifo("s1", 3, None)
+    check_session_fifo("s1", 3, 2)
+    with pytest.raises(InvariantViolation, match="session-fifo"):
+        check_session_fifo("s1", 2, 3)
+
+
+def test_serving_lost_wakeup_invariant():
+    check_all_dispatched(4, 4)
+    with pytest.raises(InvariantViolation, match="lost-wakeup"):
+        check_all_dispatched(4, 3)
+
+
 # ======================================================================
 # schedule explorer: clean protocols are verified exhaustively
 # ======================================================================
@@ -343,6 +577,20 @@ def test_lookback_protocol_clean_and_exhaustive():
     res = explore(lookback_model(3, granularity="fine"))
     assert res.ok and res.exhausted
     assert {"lookback.read", "lookback.publish_prefix"} <= set(res.labels)
+
+
+def test_serving_protocol_clean_and_exhaustive():
+    res = explore(
+        frontend_model([("batch", 0, 1, [None, None]), ("inter", 1, 1, [None])])
+    )
+    assert res.ok and res.exhausted
+    assert res.schedules > 100
+    assert set(SERVING_LABELS) <= set(res.labels)
+
+
+def test_serving_sessions_clean_under_two_dispatchers():
+    res = explore(frontend_model([("scope", 0, 2, ["s1", "s1"])], dispatchers=2))
+    assert res.ok and res.exhausted
 
 
 def test_explorer_reports_deadlock():
@@ -431,6 +679,49 @@ def test_seeded_cas_bug_reports_double_claim():
     )
 
 
+# Serving-twin mutations: each re-introduces one protocol bug the real
+# front end's locking prevents, and names the invariant that must catch it.
+_SERVING_BUGS = [
+    # (bug name, model factory, schedule budget, expected invariant)
+    ("dispatch_while_full",
+     frontend_model([("batch", 0, 1, [None, None]), ("inter", 1, 1, [None])],
+                    bugs=frozenset({"dispatch_while_full"})),
+     2000, "admission-bound"),
+    ("lane_inversion",
+     frontend_model([("batch", 0, 1, [None, None]), ("inter", 1, 1, [None])],
+                    bugs=frozenset({"lane_inversion"})),
+     2000, "lane-priority"),
+    ("lost_wakeup",
+     frontend_model([("batch", 0, 1, [None, None]), ("inter", 1, 1, [None])],
+                    bugs=frozenset({"lost_wakeup"})),
+     2000, "lost-wakeup"),
+    ("drop_busy_set",
+     frontend_model([("scope", 0, 2, ["s1", "s1"])], dispatchers=2,
+                    bugs=frozenset({"drop_busy_set"})),
+     4000, "session-exclusive"),
+    ("double_dispatch",
+     frontend_model([("a", 0, 2, [None, None])], dispatchers=2,
+                    bugs=frozenset({"double_dispatch"})),
+     4000, "no-double-claim"),
+]
+
+
+@pytest.mark.parametrize(
+    "name,factory,budget,invariant",
+    _SERVING_BUGS, ids=[b[0] for b in _SERVING_BUGS],
+)
+def test_serving_twin_detects_seeded_bug(name, factory, budget, invariant):
+    """Mutation seeding for the serving protocol: removing each piece of
+    the front end's locking discipline must be caught by the named
+    invariant within a bounded schedule budget."""
+    res = explore(factory, max_schedules=budget)
+    assert res.violations, f"seeded bug {name!r} survived {res.schedules} schedules"
+    assert any(v.invariant == invariant for v in res.violations), (
+        f"{name!r} caught, but not by {invariant!r}: "
+        f"{[v.invariant for v in res.violations[:5]]}"
+    )
+
+
 # ======================================================================
 # anchoring: the real executors hit the model's sync points
 # ======================================================================
@@ -509,6 +800,156 @@ def test_lookback_resolve_checks_protocol_when_enabled(checking):
     assert observed_labels().get("lookback.read", 0) >= 2
 
 
+def test_real_frontend_hits_serving_labels(checking):
+    """The serving twin's labels anchor to the shipped front end: one
+    admit/reject/dispatch cycle hits every SERVING_LABELS point, and the
+    instrumented lock discipline leaves the sanitizer clean."""
+    from repro.serving.frontend import (
+        AdmissionError, FrontendConfig, RegistrationFrontend,
+    )
+
+    reset_race_tracker()
+    fe = RegistrationFrontend(
+        FrontendConfig(queue_depth=1), auto_dispatch=False
+    )
+    try:
+        fe.add_tenant("a")
+        t = fe.call("a", lambda: 42)
+        with pytest.raises(AdmissionError):
+            fe.call("a", lambda: 0)  # depth 1, queue full -> serve.reject
+        assert fe.dispatch_one()
+        assert t.result(timeout=2.0) == 42
+    finally:
+        fe.close()
+    observed = set(observed_labels())
+    missing = set(SERVING_LABELS) - observed
+    assert not missing, f"front end never hit: {sorted(missing)}"
+    # All four accesses sit inside `with self._cond` — the vector clocks
+    # must order them even across the dispatcher/submitter thread split.
+    assert get_race_tracker().races() == []
+    reset_race_tracker()
+
+
+def test_pool_priority_lane_claim_is_labeled(checking):
+    """The priority-lane selection read in WorkerPool._claim_locked is a
+    labeled sync point (the lane_inversion twin anchors to it)."""
+    from repro.runtime.scheduler import WorkerPool, _TaskGroup
+
+    pool = WorkerPool(0)  # no workers: claim white-box, single-threaded
+    group = _TaskGroup([lambda: 1], "g", 3)
+    with pool._cond:
+        pool._groups.append(group)
+        claim = pool._claim_locked()
+    assert claim is not None
+    assert observed_labels().get("pool.lane.priority", 0) >= 1
+    assert observed_labels().get("pool.claim", 0) >= 1
+
+
+# ======================================================================
+# happens-before sanitizer (vector clocks)
+# ======================================================================
+
+
+def test_race_tracker_flags_unordered_writes():
+    t = RaceTracker()
+    t.access(1, "x", "write", label="w1")
+    t.access(2, "x", "write", label="w2")
+    races = t.races()
+    assert len(races) == 1
+    r = races[0]
+    assert r.var == "x" and "race on" in str(r)
+
+
+def test_race_tracker_lock_orders_accesses():
+    t = RaceTracker()
+    t.access(1, "x", "write", lock="L")
+    t.access(2, "x", "write", lock="L")
+    t.access(3, "x", "read", lock="L")
+    assert t.races() == []
+
+
+def test_race_tracker_read_write_conflicts():
+    t = RaceTracker()
+    t.access(1, "x", "read")
+    t.access(2, "x", "write")
+    assert len(t.races()) == 1
+    # Concurrent reads alone are not a race.
+    t2 = RaceTracker()
+    t2.access(1, "y", "read")
+    t2.access(2, "y", "read")
+    assert t2.races() == []
+
+
+def test_race_tracker_different_locks_still_race():
+    t = RaceTracker()
+    t.access(1, "x", "write", lock="L1")
+    t.access(2, "x", "write", lock="L2")
+    assert len(t.races()) == 1
+
+
+def test_race_tracker_explicit_acquire_release_and_reset():
+    t = RaceTracker()
+    t.acquire(1, "L")
+    t.access(1, "x", "write")
+    t.release(1, "L")
+    t.acquire(2, "L")
+    t.access(2, "x", "write")
+    t.release(2, "L")
+    assert t.races() == []
+    t.access(3, "x", "write")  # no lock: unordered with thread 2's write
+    assert len(t.races()) == 1
+    t.reset()
+    assert t.races() == []
+
+
+def test_sync_point_kinds_feed_global_tracker(checking):
+    """Threaded end-to-end: unlocked kinded sync points from two real
+    threads produce a report; the same accesses under a lock name do not."""
+    reset_race_tracker()
+
+    def unlocked():
+        sync_point("race.test", "write", var="racetest.dirty")
+
+    def locked():
+        sync_point("race.test", "write",
+                   var="racetest.clean", lock="racetest.lock")
+
+    threads = [threading.Thread(target=unlocked) for _ in range(2)]
+    threads += [threading.Thread(target=locked) for _ in range(2)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    races = get_race_tracker().races()
+    assert any(r.var == "racetest.dirty" for r in races)
+    assert not any(r.var == "racetest.clean" for r in races)
+    reset_race_tracker()  # deliberate seeded race: don't leak the report
+
+
+def test_sync_point_kind_validation(checking):
+    with pytest.raises(ValueError, match="requires var="):
+        sync_point("bad.point", "write")
+    with pytest.raises(ValueError, match="requires lock="):
+        sync_point("bad.point", "acquire")
+    with pytest.raises(ValueError, match="unknown sync_point kind"):
+        sync_point("bad.point", "mumble", var="v")
+    reset_observed()
+
+
+def test_sync_point_off_switch_is_cheap():
+    """The whole sanitizer rides behind one global bool: 200k kinded
+    sync_point calls with checking off must be effectively free (tier-1
+    runs with the gate off — this pins the zero-overhead claim)."""
+    assert not invariants_enabled()
+    t0 = time.perf_counter()
+    for _ in range(200_000):
+        sync_point("budget.probe", "write",
+                   var="budget.var", lock="budget.lock")
+    dt = time.perf_counter() - t0
+    assert dt < 1.0, f"off-switch sync_point cost {dt:.3f}s for 200k calls"
+    assert "budget.probe" not in observed_labels()
+
+
 # ======================================================================
 # satellite regressions: sanctioned daemons + crash propagation
 # ======================================================================
@@ -572,6 +1013,134 @@ def test_prefetch_forwards_producer_error():
     with pytest.raises(ValueError, match="stream died"):
         for _ in it:
             pass
+
+
+# ======================================================================
+# satellite regressions: the genuine LCK findings, fixed
+# ======================================================================
+
+
+def test_telemetry_summary_locked_and_consistent():
+    """LCK001 fix: summary()/mean()/estimate()/imbalance() read the EMA
+    state under the telemetry lock (summary snapshots all fields in ONE
+    critical section via the _locked helpers — the lock is non-reentrant,
+    so the old nested public calls would now deadlock, not race)."""
+    from repro.core.engine.telemetry import OpTelemetry
+
+    tel = OpTelemetry("op")
+    stop = threading.Event()
+    bad = []
+
+    def reader():
+        while not stop.is_set():
+            s = tel.summary()
+            # calls and total move together under the lock: a nonzero call
+            # count can never be observed with a zero mean service time.
+            if s["calls"] and not s["mean_s"] > 0:
+                bad.append(s)
+            tel.mean(); tel.estimate(); tel.imbalance()
+
+    th = threading.Thread(target=reader)
+    th.start()
+    try:
+        for _ in range(2000):
+            tel.record(0.001)
+    finally:
+        stop.set()
+        th.join(timeout=5.0)
+    assert not bad, bad[:3]
+    assert tel.summary()["calls"] == 2000
+
+
+@dataclasses.dataclass
+class _FakePlan:  # module level: pickled by PlanStore round-trips
+    payload: int
+    scratch: dict = dataclasses.field(default_factory=dict)
+
+
+def test_plan_store_counters_survive_concurrent_traffic(tmp_path):
+    """LCK001 fix: PlanStore.loads/stores are bumped under a lock —
+    concurrent store+load traffic must not lose counter increments
+    (`n += 1` is not atomic)."""
+    from repro.runtime.compile_cache import PlanStore
+
+    store = PlanStore(str(tmp_path))
+    n_threads, n_ops = 8, 25
+
+    def hammer(i):
+        for j in range(n_ops):
+            assert store.store(("k", i, j), _FakePlan(i * 100 + j))
+            loaded = store.load(("k", i, j))
+            assert loaded is not None and loaded.payload == i * 100 + j
+
+    threads = [
+        threading.Thread(target=hammer, args=(i,)) for i in range(n_threads)
+    ]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    assert store.stores == n_threads * n_ops
+    assert store.loads == n_threads * n_ops
+
+
+def test_pool_occupancy_and_num_workers_locked():
+    """LCK001 fix: occupancy() reads demand and _claimed under the pool
+    condition; the zero-capacity branch reports inf only under real
+    demand (and 0.0 when idle, not a division error)."""
+    from repro.runtime.scheduler import WorkerPool, _TaskGroup
+
+    pool = WorkerPool(0)
+    assert pool.num_workers == 0
+    assert pool.occupancy() == 0.0
+    with pool._cond:
+        pool._groups.append(_TaskGroup([lambda: 1], "g", 0))
+    assert pool.occupancy() == float("inf")
+
+
+def test_frontend_concurrent_submits_keep_admission_consistent():
+    """LCK001 fix: tenant lookups and counter updates share the frontend
+    condition — a submit storm from many threads never loses an admitted
+    request and never over-admits past the queue depth."""
+    from repro.serving.frontend import (
+        AdmissionError, FrontendConfig, RegistrationFrontend,
+    )
+
+    depth = 64
+    fe = RegistrationFrontend(
+        FrontendConfig(queue_depth=depth), auto_dispatch=False
+    )
+    try:
+        fe.add_tenant("a")
+        outcomes = []
+        out_lock = threading.Lock()
+
+        def submit():
+            for _ in range(16):
+                try:
+                    fe.call("a", lambda: None)
+                    ok = True
+                except AdmissionError:
+                    ok = False
+                with out_lock:
+                    outcomes.append(ok)
+
+        threads = [threading.Thread(target=submit) for _ in range(8)]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+        admitted = sum(outcomes)
+        stats = fe.stats()["tenants"]["a"]
+        assert stats["queued"] == admitted <= depth
+        assert stats["admitted"] == admitted
+        assert stats["rejected"] == len(outcomes) - admitted
+        drained = 0
+        while fe.dispatch_one():
+            drained += 1
+        assert drained == admitted
+    finally:
+        fe.close()
 
 
 # ======================================================================
