@@ -3,7 +3,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test test-fast test-slow lint analyze analyze-fast sanitize bench bench-smoke bench-kernels cache-smoke bench-slo docs-check bench-baseline ci quickstart
+.PHONY: test test-fast test-slow lint analyze analyze-fast sanitize bench bench-smoke bench-kernels cache-smoke bench-slo bench-sharded docs-check bench-baseline ci quickstart
 
 # Tier-1: the full suite, fail-fast, exactly as the roadmap runs it.
 test:
@@ -69,6 +69,14 @@ bench-slo:
 	$(PY) benchmarks/bench_slo.py --smoke --json BENCH_slo_ci.json
 	$(PY) benchmarks/compare_baseline.py BENCH_slo_ci.json benchmarks/baselines/BENCH_slo_ci.json
 
+# Multi-device strong-scaling gate (docs/ARCHITECTURE.md "Sharded
+# execution"): one 4096-element series across 1/4/8 virtual devices, 8-dev
+# sharded >= 1.5x single-device wall and exscan phase-2 rounds matching
+# both ceil(log2 p) and the simulator's prediction.
+bench-sharded:
+	$(PY) benchmarks/bench_sharded.py --smoke --json BENCH_sharded_ci.json
+	$(PY) benchmarks/compare_baseline.py BENCH_sharded_ci.json benchmarks/baselines/BENCH_sharded_ci.json
+
 # Docs health: internal links resolve and every quoted `python -m`
 # invocation still parses --help (tools/check_docs.py).
 docs-check:
@@ -80,9 +88,10 @@ bench-baseline:
 	$(PY) benchmarks/bench_registration_e2e.py --smoke --json benchmarks/baselines/BENCH_e2e_ci.json
 	$(PY) benchmarks/bench_serve.py --smoke --json benchmarks/baselines/BENCH_serve_ci.json
 	$(PY) benchmarks/bench_slo.py --smoke --json benchmarks/baselines/BENCH_slo_ci.json
+	$(PY) benchmarks/bench_sharded.py --smoke --json benchmarks/baselines/BENCH_sharded_ci.json
 
 # Everything .github/workflows/ci.yml gates on, in one local target.
-ci: lint analyze sanitize test-fast bench-smoke docs-check bench-slo
+ci: lint analyze sanitize test-fast bench-smoke docs-check bench-slo bench-sharded
 
 quickstart:
 	$(PY) examples/quickstart.py

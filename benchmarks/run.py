@@ -18,6 +18,7 @@ from . import (
     bench_registration_e2e,
     bench_scan_kernels,
     bench_serve,
+    bench_sharded,
     bench_slo,
     bench_strong_scaling,
     bench_weak_scaling,
@@ -36,6 +37,7 @@ SUITES = {
     "scan_kernels": bench_scan_kernels,      # in-model scan paths (real time)
     "serve": bench_serve,                    # resident runtime / sessions
     "slo": bench_slo,                        # serving tail latency (ISSUE 8)
+    "sharded": bench_sharded,                # multi-device strong scaling
     "roofline": roofline,                    # dry-run roofline table
 }
 

@@ -252,6 +252,59 @@ def sklansky_circuit(n: int) -> Circuit:
     return Circuit(n, tuple(rounds), "sklansky")
 
 
+def exscan_circuit(p: int) -> Circuit:
+    """Round-efficient *exclusive* scan over ``p`` ranks (Träff 2025, MPI_Exscan).
+
+    The naive exclusive scan is an inclusive scan followed by a shift —
+    ceil(log2 p) + 1 communication rounds.  Träff's doubling schedule fuses the
+    shift away by keeping two registers per rank:
+
+      e_i  (wires [0, p))   the exclusive prefix, initially the identity
+      s_i  (wires [p, 2p))  the running window sum, initially the input x_i
+
+    Round with distance d sends one message per receiving rank — rank i >= d
+    receives s_{i-d} and applies it to *both* registers:
+
+      e_i = s_{i-d} (.) e_i        s_i = s_{i-d} (.) s_i
+
+    Invariant before the round at distance d:
+    e_i = x[max(0, i-d+1) .. i-1],  s_i = x[max(0, i-d+1) .. i] — so after
+    ceil(log2 p) rounds e_i is the full exclusive prefix.  One round fewer
+    than shift-then-scan, on the slowest axis of the hierarchy.
+
+    The e-wires start as identity; express that to the planner via a wire mask
+    (``get_plan(circ, mask=[True]*p + [False]*p)``), *not* with ``z`` rounds —
+    a ``z`` round would flag ``total_available`` and break collective lowering.
+    Rank 0's e-wire is never written: it keeps whatever the executor
+    initialised it with (the identity, or zeros that callers mask).
+    """
+    if p < 1:
+        raise ValueError("exscan_circuit requires p >= 1")
+    rounds: List[Round] = []
+    d = 1
+    while d < p:
+        rnd: List[Entry] = []
+        for i in range(d, p):
+            rnd.append(("c", p + i - d, i))      # e_i = s_{i-d} (.) e_i
+            rnd.append(("c", p + i - d, p + i))  # s_i = s_{i-d} (.) s_i
+        rounds.append(tuple(rnd))
+        d *= 2
+    return Circuit(2 * p, tuple(rounds), "exscan", exclusive=True)
+
+
+@lru_cache(maxsize=256)
+def get_exscan_circuit(p: int) -> Circuit:
+    """Cached, validated exscan circuit for ``p`` ranks (2p wires)."""
+    c = exscan_circuit(p)
+    c.validate()
+    return c
+
+
+def exscan_num_rounds(p: int) -> int:
+    """Communication rounds of the exscan schedule: ceil(log2 p)."""
+    return math.ceil(math.log2(p)) if p > 1 else 0
+
+
 GENERATORS: Dict[str, Callable[[int], Circuit]] = {
     "sequential": sequential_circuit,
     "dissemination": dissemination_circuit,

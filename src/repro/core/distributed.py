@@ -24,12 +24,13 @@ we take it as an argument; ``jax.lax.axis_size`` is used when available).
 
 from __future__ import annotations
 
-from typing import Any, Callable, Optional, Sequence
+from typing import Any, Callable, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
+from .circuits import get_exscan_circuit
 from .engine.backends import lower_collective
 from .engine.plan import ExecutionPlan, get_plan
 from .scan import _local_inclusive_scan, _local_reduce, _tree_concat
@@ -39,9 +40,15 @@ Op = Callable[[Any, Any], Any]
 
 def _axis_size(axis_name: str, axis_size: Optional[int]) -> int:
     if axis_size is not None:
-        return axis_size
-    size = jax.lax.axis_size(axis_name)  # static inside shard_map
-    return int(size)
+        return int(axis_size)
+    fn = getattr(jax.lax, "axis_size", None)  # static inside shard_map
+    if fn is None:
+        raise ValueError(
+            f"cannot determine the size of mesh axis {axis_name!r}: this jax "
+            f"({jax.__version__}) has no jax.lax.axis_size — pass the static "
+            f"axis_size= argument explicitly"
+        )
+    return int(fn(axis_name))
 
 
 def _where_tree(mask, a, b):
@@ -100,6 +107,70 @@ def exclusive_shift(x, axis_name: str, *, axis_size: Optional[int] = None):
     return lax.ppermute(x, axis_name, perm=[(i, i + 1) for i in range(p - 1)])
 
 
+def exscan_plan(p: int) -> ExecutionPlan:
+    """Plan for the Träff round-efficient exclusive scan over ``p`` ranks.
+
+    The 2p-wire circuit's e-register starts as the identity, expressed to the
+    planner via the wire mask — round 0's e-updates therefore compile into
+    *moves* (received-value overwrites), not operator applications.
+    """
+    circ = get_exscan_circuit(p)
+    return get_plan(circ, mask=[True] * p + [False] * p)
+
+
+#: Trace-time log of executed exclusive-scan schedules: one entry per
+#: ``exclusive_collective_scan`` lowering, the number of ppermute rounds.
+#: Tests and benches assert the executed round count matches the Träff
+#: schedule (ceil(log2 p)) and the simulator's prediction.
+_exscan_rounds_log: List[int] = []
+
+
+def last_exscan_rounds() -> Optional[int]:
+    return _exscan_rounds_log[-1] if _exscan_rounds_log else None
+
+
+def exclusive_collective_scan(
+    op: Op,
+    x,
+    axis_name: str,
+    *,
+    axis_size: Optional[int] = None,
+    init=None,
+):
+    """Round-efficient *exclusive* scan across ``axis_name`` (Träff 2025).
+
+    Device i ends with x_0 (.) ... (.) x_{i-1} in ceil(log2 p) ppermute
+    rounds — one round fewer than the naive inclusive-scan-then-shift
+    (:func:`collective_scan` + :func:`exclusive_shift`): each round's single
+    message carries the sender's window sum and updates *both* the exclusive
+    prefix and the window registers of the receiver.
+
+    Device 0 receives ``init`` (zeros by default) — callers must mask with
+    ``lax.axis_index(axis) > 0`` unless ``init`` is a true identity of ``op``.
+    """
+    p = _axis_size(axis_name, axis_size)
+    if init is None:
+        init = jax.tree.map(jnp.zeros_like, x)
+    if p == 1:
+        return init
+    rounds = lower_collective(exscan_plan(p), registers=2)
+    _exscan_rounds_log.append(len(rounds))
+    my = lax.axis_index(axis_name)
+    regs = [init, x]  # [e, s]: exclusive prefix, window sum
+    for rnd in rounds:
+        # Exscan rounds are one-to-one by construction (fanout == 1).
+        recv = lax.ppermute(regs[rnd.send_reg], axis_name, perm=list(rnd.perm))
+        new_regs = []
+        for r in range(2):
+            cmask = jnp.asarray(rnd.dst_mask[r])[my]
+            mmask = jnp.asarray(rnd.move_mask[r])[my]
+            y = _where_tree(cmask, op(recv, regs[r]), regs[r])
+            y = _where_tree(mmask, recv, y)
+            new_regs.append(y)
+        regs = new_regs
+    return regs[0]
+
+
 def _masked_total(y, axis_name: str, p: int):
     """Value held by the last device on the axis, broadcast to all devices.
 
@@ -127,7 +198,10 @@ def hierarchical_collective_scan(
     ranks/threads.  Only the outermost scan crosses the slow network.
     """
     if algorithms is None:
-        algorithms = ["ladner_fischer"] * len(axis_names)
+        # Non-innermost levels fold an *exclusive* group prefix — default to
+        # the round-efficient exscan there; the innermost level is a plain
+        # inclusive scan and keeps the paper's Ladner–Fischer circuit.
+        algorithms = ["exscan"] * (len(axis_names) - 1) + ["ladner_fischer"]
     if axis_sizes is None:
         axis_sizes = [None] * len(axis_names)
     if len(axis_names) == 1:
@@ -146,16 +220,61 @@ def hierarchical_collective_scan(
     total = y
     for n, p in zip(inner_names, p_inner):
         total = _masked_total(total, n, p)
-    # Outer scan over group summaries, then fold the *exclusive* outer prefix
-    # back into every member of the group.
+    # Outer *exclusive* scan over group summaries, folded back into every
+    # member of the group.  The default outer schedule is the round-efficient
+    # exscan — ceil(log2 p) rounds instead of the legacy inclusive scan plus
+    # shift (one round more, kept for explicitly-requested circuits).
     outer = axis_names[0]
     p_outer = _axis_size(outer, axis_sizes[0])
-    g = collective_scan(
-        op, total, outer, algorithm=algorithms[0], axis_size=p_outer
-    )
-    g_prev = exclusive_shift(g, outer, axis_size=p_outer)
+    if algorithms[0] in (None, "exscan"):
+        g_prev = exclusive_collective_scan(op, total, outer, axis_size=p_outer)
+    else:
+        g = collective_scan(
+            op, total, outer, algorithm=algorithms[0], axis_size=p_outer
+        )
+        g_prev = exclusive_shift(g, outer, axis_size=p_outer)
     has_prev = lax.axis_index(outer) > 0
     return _where_tree(has_prev, op(g_prev, y), y)
+
+
+def exclusive_hierarchical_scan(
+    op: Op,
+    x,
+    axis_names: Sequence[str],
+    *,
+    axis_sizes: Optional[Sequence[int]] = None,
+) -> Any:
+    """Exclusive scan across the flattened (outer..., inner) hierarchy.
+
+    Every level runs the round-efficient exscan schedule directly — no
+    inclusive scan followed by shifts (:func:`_exclusive_over_hierarchy`), so
+    the slowest (outermost) axis sees exactly ceil(log2 p) rounds.  The
+    hierarchically-first device receives zeros — callers must mask with
+    :func:`_nonzero_linear_index`.
+    """
+    if axis_sizes is None:
+        axis_sizes = [None] * len(axis_names)
+    outer = axis_names[0]
+    p_outer = _axis_size(outer, axis_sizes[0])
+    if len(axis_names) == 1:
+        return exclusive_collective_scan(op, x, outer, axis_size=p_outer)
+    inner_names = axis_names[1:]
+    inner_sizes = axis_sizes[1:]
+    e_in = exclusive_hierarchical_scan(op, x, inner_names, axis_sizes=inner_sizes)
+    # Group total = the last inner device's *inclusive* value; devices with an
+    # inner predecessor fold their exclusive prefix in first (op-agnostic:
+    # only one device per group contributes to the masked psum).
+    inner_first = jnp.logical_not(_nonzero_linear_index(inner_names))
+    incl = _where_tree(inner_first, x, op(e_in, x))
+    total = incl
+    for n, s in zip(inner_names, inner_sizes):
+        total = _masked_total(total, n, _axis_size(n, s))
+    e_out = exclusive_collective_scan(op, total, outer, axis_size=p_outer)
+    # Devices on outer index 0 keep the inner exclusive prefix; inner-first
+    # devices of later groups take the group prefix verbatim.
+    combined = _where_tree(inner_first, e_out, op(e_out, e_in))
+    has_outer_prev = lax.axis_index(outer) > 0
+    return _where_tree(has_outer_prev, combined, e_in)
 
 
 def distributed_blocked_scan(
@@ -174,13 +293,26 @@ def distributed_blocked_scan(
     Strategy and global circuit per the paper §4.1; the global phase is the
     (possibly hierarchical) collective scan.
     """
-    if strategy == "scan_then_map":
-        local = _local_inclusive_scan(op, xs_local)          # LP1: local scan
-        partial = jax.tree.map(lambda t: t[-1], local)
+    def _exclusive_prefix(partial):
+        """Exclusive device prefix of the per-device partials.
+
+        Default (no explicit circuits): every level runs the round-efficient
+        exscan directly.  Explicit ``algorithms`` keep the legacy inclusive
+        hierarchical scan + shift cascade.
+        """
+        if algorithms is None:
+            return exclusive_hierarchical_scan(
+                op, partial, axis_names, axis_sizes=axis_sizes
+            )
         g = hierarchical_collective_scan(
             op, partial, axis_names, algorithms=algorithms, axis_sizes=axis_sizes
         )
-        prev = _exclusive_over_hierarchy(g, axis_names, axis_sizes)
+        return _exclusive_over_hierarchy(g, axis_names, axis_sizes)
+
+    if strategy == "scan_then_map":
+        local = _local_inclusive_scan(op, xs_local)          # LP1: local scan
+        partial = jax.tree.map(lambda t: t[-1], local)
+        prev = _exclusive_prefix(partial)
         has_prev = _nonzero_linear_index(axis_names)
         k = jax.tree.leaves(local)[0].shape[0]
         prev_b = jax.tree.map(
@@ -189,10 +321,7 @@ def distributed_blocked_scan(
         return _where_tree(has_prev, op(prev_b, local), local)
     if strategy == "reduce_then_scan":
         partial = _local_reduce(op, xs_local)                # LP1: local reduce
-        g = hierarchical_collective_scan(
-            op, partial, axis_names, algorithms=algorithms, axis_sizes=axis_sizes
-        )
-        prev = _exclusive_over_hierarchy(g, axis_names, axis_sizes)
+        prev = _exclusive_prefix(partial)
         has_prev = _nonzero_linear_index(axis_names)
         # Seed the first local element with the exclusive prefix, then scan.
         x0 = jax.tree.map(lambda t: t[:1], xs_local)

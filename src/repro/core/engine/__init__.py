@@ -53,6 +53,8 @@ from .cost import (
     DEVICE_PHASE1_MIN_N,
     EXPENSIVE_OP_COST,
     POOL_BUSY_OCCUPANCY,
+    SHARDED_MIN_DEVICES,
+    SHARDED_MIN_N,
     Dispatch,
     dispatch,
     measure_op_cost,
@@ -69,10 +71,12 @@ from .telemetry import (
     release_telemetry,
 )
 
-# Registers the "pallas", "hierarchical" and "decoupled" backends on import.
+# Registers the "pallas", "hierarchical", "decoupled" and "sharded"
+# backends on import.
 from . import pallas_backend as _pallas_backend  # noqa: F401
 from . import hierarchical as _hierarchical  # noqa: F401
 from . import decoupled_backend as _decoupled_backend  # noqa: F401
+from . import sharded as _sharded  # noqa: F401
 
 Op = Callable[[Any, Any], Any]
 
@@ -83,6 +87,8 @@ __all__ = [
     "DEVICE_PHASE1_MIN_N",
     "EXPENSIVE_OP_COST",
     "POOL_BUSY_OCCUPANCY",
+    "SHARDED_MIN_DEVICES",
+    "SHARDED_MIN_N",
     "pool_aware_workers",
     "get_default_pool",
     "release_telemetry",
@@ -177,6 +183,8 @@ def scan(
     seed: Any = None,
     device_phase1: Optional[bool] = None,
     pool=None,
+    devices: Optional[int] = None,
+    mesh=None,
 ):
     """Inclusive prefix scan of ``xs`` with associative ``op``.
 
@@ -208,6 +216,12 @@ def scan(
     and a saturated pool shifts small series to the work-optimal
     sequential chain instead of queueing (``cost.POOL_BUSY_OCCUPANCY``).
 
+    ``devices``/``mesh``: local device count / explicit 1-D jax mesh for
+    the multi-device ``sharded`` backend (one long series split into
+    per-device shards: stealing phase 1, round-efficient exscan phase 2).
+    The dispatcher enables it automatically when ``jax.device_count()``
+    reaches ``SHARDED_MIN_DEVICES`` for long batchable series.
+
     Backend-specific options: ``num_blocks``/``strategy`` (blocked, pallas
     tiles), ``num_threads``/``stealing`` (worksteal), ``num_segments``/
     ``num_threads``/``cross_steal``/``element_costs``/``use_pallas``
@@ -220,12 +234,12 @@ def scan(
     element_domain = isinstance(xs, list)
     if (
         seed is not None
-        and backend != "decoupled"
+        and backend not in ("decoupled", "sharded")
         and (not element_domain or backend == "collective")
     ):
         raise NotImplementedError("seed= is supported in the element domain "
                                   "(worksteal/hierarchical/element) and by "
-                                  "the decoupled backend")
+                                  "the decoupled and sharded backends")
     if element_domain and backend != "collective":
         if pool is None:
             pool = get_default_pool()
@@ -240,6 +254,7 @@ def scan(
                 element_costs=element_costs, interpret=interpret,
                 use_pallas=use_pallas, workers=workers, seed=seed,
                 device_phase1=device_phase1, pool=pool,
+                devices=devices, mesh=mesh,
             )
     return _scan_impl(
         op, xs, element_domain,
@@ -250,6 +265,7 @@ def scan(
         element_costs=element_costs, interpret=interpret,
         use_pallas=use_pallas, workers=workers, seed=seed,
         device_phase1=device_phase1, pool=pool,
+        devices=devices, mesh=mesh,
     )
 
 
@@ -288,6 +304,8 @@ def _scan_impl(
     seed,
     device_phase1,
     pool,
+    devices,
+    mesh,
 ):
     # --- collective: SPMD over a mesh axis; xs is this device's element.
     if backend == "collective":
@@ -334,12 +352,20 @@ def _scan_impl(
         occupancy = (
             pool.occupancy() if element_domain and pool is not None else None
         )
+        if devices is None:
+            if mesh is not None:
+                devices = int(mesh.devices.size)
+            else:
+                import jax
+
+                devices = jax.device_count()
         d = dispatch(n, domain="element" if element_domain else "array",
                      op_cost=cost, workers=workers,
                      op_imbalance=op_imbalance_from(op),
                      pool_occupancy=occupancy,
                      op_batchable=op_batchable_from(op),
-                     accel=_accel_available())
+                     accel=_accel_available(),
+                     devices=devices)
         backend = d.backend
         if where is not None and backend in ("blocked", "worksteal",
                                              "hierarchical"):
@@ -373,6 +399,15 @@ def _scan_impl(
     if backend == "decoupled":
         ys, _ = fn(op, None, xs, num_blocks=num_blocks, seed=seed,
                    where=where, interpret=interpret)
+        return ys
+
+    # --- sharded multi-device execution: one series across all local
+    # devices — shard_map phase 1 with boundary stealing, round-efficient
+    # exscan phase 2, fused seeded apply phase 3 (engine/sharded.py).
+    if backend == "sharded":
+        ys, _ = fn(op, None, xs, devices=devices, mesh=mesh,
+                   num_blocks=num_blocks, seed=seed, where=where,
+                   stealing=stealing)
         return ys
 
     # --- backends with their own decomposition (plan covers the small phase)

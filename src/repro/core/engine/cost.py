@@ -85,6 +85,15 @@ DEVICE_PHASE1_MIN_N = 64
 # ``backend="decoupled"`` always works).
 DECOUPLED_MIN_N = 256
 
+# Sharded multi-device execution: one series split across the local devices
+# inside shard_map, boundary stealing at the shard gaps, the cross-shard
+# phase as the round-efficient Träff exscan.  Needs a batchable operator
+# (the shard body is one vectorized launch), enough devices for the
+# cross-shard phase to beat one device's vectorized scan, and a series long
+# enough that per-shard work dominates the halo/claim overhead.
+SHARDED_MIN_DEVICES = 4
+SHARDED_MIN_N = 1024
+
 
 @dataclasses.dataclass(frozen=True)
 class Dispatch:
@@ -98,6 +107,7 @@ class Dispatch:
     strategy: str = "reduce_then_scan"
     cross_steal: Optional[bool] = None
     device_phase1: Optional[bool] = None   # batched vmap phase-1 reduce
+    devices: Optional[int] = None          # mesh size for the sharded backend
     reason: str = ""
 
 
@@ -124,7 +134,7 @@ def measure_op_cost(op: Op, xs, *, reps: int = 3) -> float:
             import jax
 
             jax.block_until_ready(y)
-        except Exception:  # noqa: BLE001 — probe tolerates non-jax values
+        except Exception:  # noqa: BLE001  # analysis: allow[THR004] probe tolerates non-jax values
             pass
         times.append(time.perf_counter() - t0)
     times.sort()
@@ -169,6 +179,7 @@ def dispatch(
     pool_occupancy: Optional[float] = None,
     op_batchable: Optional[bool] = None,
     accel: bool = False,
+    devices: Optional[int] = None,
 ) -> Dispatch:
     """Pick backend + circuit + block size for one scan call.
 
@@ -190,14 +201,33 @@ def dispatch(
     as one device launch (``Dispatch.device_phase1``) instead of threads.
     ``accel``: a real accelerator backs the default device; enables the
     single-pass ``decoupled`` backend for cheap/medium array scans.
+    ``devices``: local device count (None = unknown/single-device); at
+    ``SHARDED_MIN_DEVICES``+ a long batchable series runs across all of
+    them (``sharded`` backend: shard_map phase 1 with boundary stealing,
+    Träff exscan phase 2).
     """
     if n <= 1:
         return Dispatch("element" if domain == "element" else "vector",
                         "sequential", reason="trivial n")
     w = workers if workers is not None else _default_workers()
     cost = op_cost if op_cost is not None else 0.0
+    sharded_ok = (
+        op_batchable
+        and devices is not None
+        and devices >= SHARDED_MIN_DEVICES
+        and n >= SHARDED_MIN_N
+        and cost < EXPENSIVE_OP_COST
+    )
 
     if domain == "element":
+        if sharded_ok:
+            return Dispatch(
+                "sharded", "exscan", devices=devices,
+                strategy="reduce_then_scan",
+                reason=f"batchable op, {devices} devices, N={n} -> sharded "
+                       "multi-device scan (boundary stealing + exscan "
+                       "cross-shard phase)",
+            )
         if (
             op_batchable
             and op_cost is not None
@@ -277,7 +307,22 @@ def dispatch(
             reason="serial per-element execution; work-optimal chain",
         )
 
-    # Array domain.
+    # Array domain.  The op is vectorized over the leading axis by the
+    # domain contract, so batchability needs no separate advertisement.
+    if (
+        devices is not None
+        and devices >= SHARDED_MIN_DEVICES
+        and n >= SHARDED_MIN_N
+        and cost < EXPENSIVE_OP_COST
+        and op_batchable is not False
+    ):
+        return Dispatch(
+            "sharded", "exscan", devices=devices,
+            strategy="reduce_then_scan",
+            reason=f"batchable op, {devices} devices, N={n} -> sharded "
+                   "multi-device scan (boundary stealing + exscan "
+                   "cross-shard phase)",
+        )
     if cost >= EXPENSIVE_OP_COST:
         blocks = _largest_divisor_at_most(n, max(w, 2))
         if blocks > 1:

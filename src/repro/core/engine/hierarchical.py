@@ -60,6 +60,9 @@ class HierStats:
     inter_segment_steals: List[int] = dataclasses.field(default_factory=list)
     rebalanced: bool = False                    # AOT cost-history segment sizing
     device_phase1: bool = False                 # batched vmap reduce, no threads
+    phase2_rounds: int = 0                      # cross-segment comm rounds: the
+    # inclusive plan's rounds + 1 for the exclusive shift a distributed
+    # lowering would pay (compare with the sharded backend's exscan count)
 
     def imbalance(self) -> float:
         """Max relative busy-time imbalance across segments (paper Fig. 5b)."""
@@ -158,6 +161,7 @@ def _exec_hier_device(
         phase_seconds=phase,
         total_ops=0,  # device-side applications are not individually timed
         device_phase1=True,
+        phase2_rounds=(plan.num_rounds() + 1) if plan is not None else 0,
     )
     return out, total
 
@@ -366,6 +370,7 @@ def _exec_hier_element(
             for r in seg_results
         ] if cross else [0] * s,
         rebalanced=rebalanced,
+        phase2_rounds=(plan.num_rounds() + 1) if s > 1 else 0,
     )
     return out, total
 

@@ -27,7 +27,7 @@ from typing import List, Optional, Tuple
 
 import numpy as np
 
-from .circuits import Circuit, get_circuit
+from .circuits import Circuit, get_circuit, get_exscan_circuit
 from .engine.plan import get_plan
 
 
@@ -96,6 +96,11 @@ class SimResult:
     busy: np.ndarray              # per-worker busy seconds
     energy: float = 0.0
     cross_steals: int = 0         # elements claimed across segment borders
+    phase2_rounds: int = 0        # communication rounds the phase-2 schedule
+    # executes on the wire: the plan's rounds, +1 for the exclusive shift
+    # every *inclusive* algorithm pays in the distributed lowering
+    # (``distributed.exclusive_shift``).  ``algorithm="exscan"`` needs no
+    # shift — its count must match ``distributed.last_exscan_rounds()``.
 
     def efficiency(self, serial_time: float, workers: int) -> float:
         return serial_time / (self.makespan * workers) if self.makespan else 0.0
@@ -294,6 +299,7 @@ def _simulate_circuit(
     avail: np.ndarray,
     op_cost: float,
     net: NetworkModel,
+    mask: Optional[List[bool]] = None,
 ) -> Tuple[np.ndarray, int]:
     """Run a prefix circuit over P ranks: returns (per-rank ready time, ops).
 
@@ -301,8 +307,12 @@ def _simulate_circuit(
     identity combines are already moves, and each primitive carries the
     multicast fanout of its source wire.  A combine at dst waits for both
     operands (the ``comm_src`` operand arrives after a message); each op
-    application carries multiplicative system noise (NetworkModel)."""
-    plan = get_plan(circuit)
+    application carries multiplicative system noise (NetworkModel).
+
+    ``mask`` marks identity-initialised wires (the exscan circuit's
+    e registers) so their first touch compiles to a move, exactly as the
+    real collective lowering compiles it."""
+    plan = get_plan(circuit, mask=mask)
     ready = avail.astype(np.float64).copy()
     ops = 0
     noise = net.noise_stream(sum(len(r) for r in circuit.rounds) + 1)
@@ -429,18 +439,43 @@ def simulate_distributed_scan(
     rank_ready += t_pre
 
     # ---- Phase 2: global circuit scan over P rank partials.
-    circ = get_circuit(algorithm, p)
-    gready, gops = _simulate_circuit(circ, rank_ready, float(np.median(costs)), net)
+    exscan = algorithm == "exscan"
+    if exscan:
+        # Träff round-efficient exclusive scan: 2 registers per rank
+        # (e = exclusive prefix on wires [0, p), s = window sum on
+        # [p, 2p)), both resident on rank ``w % p`` — exactly the layout
+        # ``lower_collective(..., registers=2)`` executes on devices.
+        # The e registers start as identity (mask), s as the rank partial.
+        circ = get_exscan_circuit(p)
+        gready, gops = _simulate_circuit(
+            circ, np.concatenate([rank_ready, rank_ready]),
+            float(np.median(costs)), net,
+            mask=[True] * p + [False] * p,
+        )
+        seed_ready = gready[:p]  # rank r's own e register IS its seed
+        phase2_rounds = len(circ.rounds)
+        global_end = float(seed_ready.max())
+    else:
+        circ = get_circuit(algorithm, p)
+        gready, gops = _simulate_circuit(
+            circ, rank_ready, float(np.median(costs)), net
+        )
+        # Inclusive schedule: rank r's seed is rank r-1's inclusive
+        # prefix — the exclusive shift the distributed lowering pays as
+        # one extra ppermute round (modelled free here, but counted).
+        seed_ready = np.concatenate([[rank_ready[0]], gready[:-1]])
+        phase2_rounds = len(circ.rounds) + (1 if p > 1 else 0)
+        global_end = float(gready.max())
     work += gops
 
     # ---- Phase 3: seeded local scans over final (global) boundaries.
-    # A rank's apply cannot start before BOTH its seed arrives (global
-    # exclusive prefix from rank r-1) and its own phase 1 finished — the
-    # interval seeds come from the local scan over its thread partials.
+    # A rank's apply cannot start before BOTH its seed arrives (the global
+    # exclusive prefix) and its own phase 1 finished — the interval seeds
+    # come from the local scan over its thread partials.
     finish = np.zeros(p)
     for r in range(p):
         seed_t = (
-            max(gready[r - 1], rank_ready[r]) if r > 0 else rank_ready[r]
+            max(seed_ready[r], rank_ready[r]) if r > 0 else rank_ready[r]
         )
         t_fin = 0.0
         for w, (lo, hi) in enumerate(boundaries_per_rank[r]):
@@ -456,10 +491,11 @@ def simulate_distributed_scan(
         makespan=makespan,
         work=work,
         phase1_end=float(rank_ready.max()),
-        global_end=float(gready.max()),
+        global_end=global_end,
         busy=busy,
         energy=energy,
         cross_steals=cross_count,
+        phase2_rounds=phase2_rounds,
     )
 
 

@@ -126,6 +126,12 @@ def register_series(
     seconds — see :class:`~repro.service.SeriesResult`) and operator
     telemetry.
 
+    Multi-device hosts: the session resolves ``cfg.devices`` (default
+    ``jax.device_count()``) once and pins a 1-D mesh, so suffix scans of a
+    long series auto-dispatch to the ``sharded`` engine backend — one
+    series split across all local devices with boundary stealing and a
+    round-efficient cross-shard exscan (``engine/sharded.py``).
+
     Blocking: runs the whole pipeline on the calling thread (pool workers
     help with scan tasks) and returns only when every frame has folded in.
     Re-entrant and thread-safe — each call owns a private session; only

@@ -67,8 +67,10 @@ from repro.core.deformation import (
     identity_deformation,
 )
 from repro.core.engine import (
+    SHARDED_MIN_DEVICES,
     dispatch as cost_dispatch,
     get_telemetry,
+    op_batchable_from,
     pool_aware_workers,
     release_telemetry,
     scan as engine_scan,
@@ -99,6 +101,9 @@ class RegisterSeriesConfig:
     cross_steal: Optional[bool] = None   # inter-segment stealing; None ->
                                          # dispatcher rule (telemetry imbalance)
     workers: Optional[int] = None
+    devices: Optional[int] = None        # local devices for the sharded
+                                         # multi-device scan; None ->
+                                         # jax.device_count() at session init
     skip_tol: Optional[float] = None     # fused guess check threshold
     fused_ncc: Optional[bool] = None     # route checks through warp_ncc
     telemetry_name: str = "registration_B"
@@ -175,6 +180,15 @@ class SeriesResult:
         if self.scan_stats is not None:
             st = self.scan_stats
             ph = st.phase_seconds
+            if hasattr(st, "devices"):  # ShardedStats
+                lines.append(
+                    f"  sharded: {st.devices} devices x {st.shard_rows} rows; "
+                    f"phase-2 {st.phase2_rounds} rounds "
+                    f"({st.phase2_algorithm}); "
+                    f"{st.cross_steals} cross-shard steals; "
+                    + ", ".join(f"{k}={v:.3f}s" for k, v in ph.items())
+                )
+                return "\n".join(lines)
             lines.append(
                 f"  hierarchical: {st.num_segments} segments x "
                 f"{st.threads_per_segment} threads; "
@@ -329,6 +343,20 @@ class SeriesSession:
         }
         self._backend_used: Optional[str] = None
         self._scan_stats = None
+        # Pin the device mesh once: every suffix scan of this series runs
+        # on the same devices, so sharded executables (and their boundary
+        # ledgers) are reused across feeds instead of re-traced per chunk.
+        self._devices = max(1, min(
+            self.cfg.devices if self.cfg.devices is not None
+            else jax.device_count(),
+            jax.device_count(),
+        ))
+        if self._devices >= SHARDED_MIN_DEVICES:
+            from repro.core.engine.sharded import default_mesh
+
+            self._mesh = default_mesh(self._devices)
+        else:
+            self._mesh = None
         self._pre_seconds = 0.0
         self._pre_pairs = 0
         self._feed_lock = threading.Lock()
@@ -476,6 +504,8 @@ class SeriesSession:
             backend=cfg.backend,
             algorithm=cfg.algorithm,
             workers=cfg.workers,
+            devices=self._devices,
+            mesh=self._mesh,
         )
         if seed is not None:
             sd = seed.deformation
@@ -523,6 +553,8 @@ class SeriesSession:
                     workers=pool_aware_workers(self.pool, cfg.workers),
                     op_imbalance=op.op_imbalance_estimate,
                     pool_occupancy=self.pool.occupancy(),
+                    op_batchable=op_batchable_from(op),
+                    devices=self._devices,
                 )
                 # Execute exactly what the dispatcher decided (its circuit,
                 # segment and thread counts — unless the config pins them).
@@ -547,11 +579,17 @@ class SeriesSession:
                 workers=cfg.workers,
                 seed=seed,
                 pool=self.pool,
+                devices=self._devices,
+                mesh=self._mesh,
             )
         if backend_used == "hierarchical":
             from repro.core.engine import hierarchical
 
             self._scan_stats = hierarchical.last_stats
+        elif backend_used == "sharded":
+            from repro.core.engine import sharded
+
+            self._scan_stats = sharded.last_stats
         return out, backend_used
 
     # -------------------------------------------------------------- result
